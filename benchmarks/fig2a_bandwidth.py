@@ -1,0 +1,41 @@
+"""Fig. 2a — memory-bandwidth utilization across model sizes.
+
+LPU-model utilization per OPT size vs the paper's published LPU and GPU
+utilizations.  The shape of the claim — utilization *rises* with model
+size and the LPU dominates the GPU at every size — must reproduce.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs import get_config
+from repro.core.latency_model import LPU_ASIC, token_latency
+
+from benchmarks.fig7a_latency import calibrate
+from benchmarks.paper_constants import (MEAN_KV, PAPER_BW_UTIL,
+                                        PAPER_GPU_BW_UTIL)
+
+SIZES = [("opt-1.3b", 1), ("opt-6.7b", 1), ("opt-30b", 1), ("opt-66b", 2)]
+
+
+def run() -> List[str]:
+    a, b, c, _ = calibrate()
+    rows = []
+    prev = 0.0
+    for name, n in SIZES:
+        r = token_latency(get_config(name), n, LPU_ASIC, kv_len=MEAN_KV,
+                          vec_a=a, vec_b=b, vec_c=c)
+        util = r["bandwidth_util"]
+        paper = PAPER_BW_UTIL.get((name, n))
+        gpu = PAPER_GPU_BW_UTIL.get((name, n))
+        monotone = util >= prev
+        prev = util
+        rows.append(
+            f"fig2a.bw_util.{name},{util*1e6:.0f},"
+            f"model={util:.3f};paper_lpu={paper};paper_gpu={gpu};"
+            f"rises_with_size={monotone}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,71 @@
+"""Fig. 7a — token-generation latency, OPT family (paper reproduction).
+
+Calibrates the analytic simulator's (a, b, c) vector-overhead terms on
+the paper's three published latencies, reports per-point residuals
+(6.7B/66B reproduce within ~4%; the 1.3B point is internally
+inconsistent with any non-negative model of this family — documented in
+EXPERIMENTS.md §Paper-validation), and the held-out 30B utilization.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs import get_config
+from repro.core.latency_model import (LPU_ASIC, H100, fit_vector_params,
+                                      token_latency)
+
+from benchmarks.paper_constants import (MEAN_KV, PAPER_BW_UTIL,
+                                        PAPER_LATENCY,
+                                        PAPER_SPEEDUP_VS_GPU)
+
+
+def calibrate():
+    pts = [(get_config(n), d, LPU_ASIC, MEAN_KV, ms)
+           for (n, d), ms in PAPER_LATENCY.items()]
+    return fit_vector_params(pts)
+
+
+def run() -> List[str]:
+    a, b, c, err = calibrate()
+    rows = [f"fig7a.calibration,a_us={a*1e6:.2f};b_ns={b*1e9:.2f};"
+            f"c_us={c*1e6:.2f},max_rel_err={err:.3f}"]
+    for (name, n), paper_ms in PAPER_LATENCY.items():
+        cfg = get_config(name)
+        r = token_latency(cfg, n, LPU_ASIC, kv_len=MEAN_KV, vec_a=a,
+                          vec_b=b, vec_c=c)
+        rel = abs(r["ms_per_token"] - paper_ms) / paper_ms
+        rows.append(
+            f"fig7a.latency.{name}.n{n},{r['ms_per_token']*1e3:.1f},"
+            f"paper_ms={paper_ms};model_ms={r['ms_per_token']:.2f};"
+            f"rel_err={rel:.3f};util={r['bandwidth_util']:.3f}")
+    # held-out: OPT-30B utilization (paper: 90.2%)
+    cfg30 = get_config("opt-30b")
+    r30 = token_latency(cfg30, 1, LPU_ASIC, kv_len=MEAN_KV, vec_a=a,
+                        vec_b=b, vec_c=c)
+    rows.append(
+        f"fig7a.heldout.opt-30b.util,{r30['bandwidth_util']*1e6:.0f},"
+        f"model={r30['bandwidth_util']:.3f};paper={PAPER_BW_UTIL[('opt-30b', 1)]}"
+        f";ms={r30['ms_per_token']:.2f}")
+    # GPU comparison factors (paper: 2.09x on 1.3B, 1.37x on 66B)
+    for (name, n), factor in PAPER_SPEEDUP_VS_GPU.items():
+        cfg = get_config(name)
+        lpu = token_latency(cfg, n, LPU_ASIC, kv_len=MEAN_KV, vec_a=a,
+                            vec_b=b, vec_c=c)
+        # GPU modeled at its published utilization on comparable BW
+        from benchmarks.paper_constants import PAPER_GPU_BW_UTIL
+        util_gpu = PAPER_GPU_BW_UTIL.get(
+            (name, n), PAPER_GPU_BW_UTIL[("opt-66b", 2)])
+        from repro.core.latency_model import decode_stream_bytes, \
+            kv_stream_bytes
+        stream = (decode_stream_bytes(cfg, MEAN_KV) / n
+                  + kv_stream_bytes(cfg, MEAN_KV)) / H100.mem_bw
+        gpu_ms = stream / util_gpu * 1e3
+        ours = gpu_ms / lpu["ms_per_token"]
+        rows.append(
+            f"fig7a.speedup_vs_gpu.{name},{ours*1e3:.0f},"
+            f"model_x={ours:.2f};paper_x={factor}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

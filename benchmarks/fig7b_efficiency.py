@@ -1,0 +1,66 @@
+"""Fig. 7b — server energy efficiency (tokens/s/kW).
+
+Orion-cloud (8x FPGA LPUs) vs 2xH100 on OPT-66B, and Orion-edge
+(2x FPGA LPUs) vs 2xL4 on OPT-6.7B, using published system powers and
+each side's modeled token rate (GPU at its published utilization).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs import get_config
+from repro.core.latency_model import (H100, L4, LPU_FPGA,
+                                      decode_stream_bytes, kv_stream_bytes,
+                                      token_latency)
+
+from benchmarks.fig7a_latency import calibrate
+from benchmarks.paper_constants import (MEAN_KV, PAPER_EFFICIENCY_CLOUD,
+                                        PAPER_EFFICIENCY_EDGE,
+                                        PAPER_GPU_BW_UTIL,
+                                        PAPER_H100_SERVER_W,
+                                        PAPER_ORION_CLOUD_W)
+
+
+def _gpu_tokens_per_s(cfg, n, hw, util):
+    stream = (decode_stream_bytes(cfg, MEAN_KV) / n
+              + kv_stream_bytes(cfg, MEAN_KV)) / hw.mem_bw
+    return util / stream
+
+
+def run() -> List[str]:
+    a, b, c, _ = calibrate()
+    rows = []
+    # cloud: OPT-66B on 8 FPGA LPUs vs 2x H100
+    cfg = get_config("opt-66b")
+    lpu = token_latency(cfg, 8, LPU_FPGA, kv_len=MEAN_KV, vec_a=a,
+                        vec_b=b, vec_c=c)
+    lpu_eff = lpu["tokens_per_s"] / (PAPER_ORION_CLOUD_W / 1e3)
+    gpu_tps = _gpu_tokens_per_s(cfg, 2, H100,
+                                PAPER_GPU_BW_UTIL[("opt-66b", 2)])
+    gpu_eff = gpu_tps / (PAPER_H100_SERVER_W / 1e3)
+    ratio = lpu_eff / gpu_eff
+    rows.append(
+        f"fig7b.cloud.opt-66b,{lpu_eff*1e3:.0f},"
+        f"lpu_tps_per_kw={lpu_eff:.1f};gpu_tps_per_kw={gpu_eff:.1f};"
+        f"model_ratio={ratio:.2f};paper_ratio={PAPER_EFFICIENCY_CLOUD}")
+    # edge: OPT-6.7B on 2 FPGA LPUs vs 2x L4
+    cfg = get_config("opt-6.7b")
+    lpu = token_latency(cfg, 2, LPU_FPGA, kv_len=MEAN_KV, vec_a=a,
+                        vec_b=b, vec_c=c)
+    edge_w = 2 * 160.0          # Orion-edge chassis (2 cards + host)
+    lpu_eff = lpu["tokens_per_s"] / (edge_w / 1e3)
+    gpu_tps = _gpu_tokens_per_s(cfg, 2, L4,
+                                PAPER_GPU_BW_UTIL[("opt-1.3b", 1)] * 2.2)
+    gpu_eff = gpu_tps / (2 * L4.system_power_w + 180) * 1e3
+    ratio = lpu_eff / gpu_eff
+    rows.append(
+        f"fig7b.edge.opt-6.7b,{lpu_eff*1e3:.0f},"
+        f"lpu_tps_per_kw={lpu_eff:.1f};gpu_tps_per_kw={gpu_eff:.1f};"
+        f"model_ratio={ratio:.2f};paper_ratio={PAPER_EFFICIENCY_EDGE};"
+        f"note=edge chassis power split unpublished - ratio sensitive to "
+        f"the host-power assumption (cloud point is the calibrated one)")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

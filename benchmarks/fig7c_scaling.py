@@ -1,0 +1,45 @@
+"""Fig. 7c — strong scaling of token generation, GPT3-20B, 1..8 devices.
+
+ESL (overlapped ring) vs blocking baseline vs the paper's published
+DGX A100 reference.  Also quantifies the beyond-paper win of *sharding
+the KV cache* across the ring (the LPU replicates it — see
+core/latency_model.py docstring).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs import get_config
+from repro.core.latency_model import LPU_ASIC, scaling_curve
+
+from benchmarks.fig7a_latency import calibrate
+from benchmarks.paper_constants import (MEAN_KV, PAPER_DGX_SCALING_8DEV,
+                                        PAPER_LPU_SCALING_8DEV,
+                                        PAPER_LPU_SCALING_PER_DOUBLING)
+
+
+def run() -> List[str]:
+    a, b, c, _ = calibrate()
+    cfg = get_config("gpt3-20b")
+    kw = dict(kv_len=MEAN_KV, vec_a=a, vec_b=b, vec_c=c)
+    esl = scaling_curve(cfg, LPU_ASIC, 8, overlap=True, **kw)
+    blk = scaling_curve(cfg, LPU_ASIC, 8, overlap=False, **kw)
+    esl_kv = scaling_curve(cfg, LPU_ASIC, 8, overlap=True, shard_kv=True,
+                           **kw)
+    dbl = (esl[-1]) ** (1 / 3)
+    rows = [
+        f"fig7c.scaling.esl.8dev,{esl[-1]*1e3:.0f},"
+        f"curve={[round(x,2) for x in esl]};paper={PAPER_LPU_SCALING_8DEV}",
+        f"fig7c.scaling.esl.per_doubling,{dbl*1e3:.0f},"
+        f"model_x={dbl:.2f};paper_x={PAPER_LPU_SCALING_PER_DOUBLING}",
+        f"fig7c.scaling.blocking.8dev,{blk[-1]*1e3:.0f},"
+        f"curve={[round(x,2) for x in blk]};"
+        f"dgx_published={PAPER_DGX_SCALING_8DEV}",
+        f"fig7c.scaling.esl_shardkv.8dev,{esl_kv[-1]*1e3:.0f},"
+        f"curve={[round(x,2) for x in esl_kv]};beyond_paper=kv_sharded",
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

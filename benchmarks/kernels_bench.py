@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks: arithmetic intensity, VMEM tiles, and
+interpret-mode wall time (correctness-path cost only — CPU interpret
+timing says nothing about TPU; the roofline terms are the perf claim).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                plan_block_s)
+from repro.kernels.gemv.ops import gemv, plan_blocks
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def run() -> List[str]:
+    rows = []
+    rng = jax.random.PRNGKey(0)
+
+    for B, K, N in [(8, 4096, 4096), (8, 7168, 19200 // 16 * 16)]:
+        bk, bn = plan_blocks(B, K, N)
+        flops = 2 * B * K * N
+        bytes_ = K * N * 2 + B * K * 2 + B * N * 2
+        ai = flops / bytes_
+        ridge = PEAK_FLOPS_BF16 / HBM_BW
+        x = jax.random.normal(rng, (B, K), jnp.bfloat16)
+        w = jax.random.normal(rng, (K, N), jnp.bfloat16)
+        t0 = time.time()
+        gemv(x, w).block_until_ready()
+        dt = time.time() - t0
+        rows.append(
+            f"kernel.gemv.B{B}K{K}N{N},{dt*1e6:.0f},"
+            f"block=({bk}x{bn});arith_intensity={ai:.2f};"
+            f"ridge={ridge:.0f};bound=memory;"
+            f"t_hbm_us={bytes_/HBM_BW*1e6:.1f}")
+
+    for B, S, G, gs, dh in [(8, 2048, 1, 4, 128), (4, 4096, 2, 2, 128)]:
+        H = G * gs
+        q = jax.random.normal(rng, (B, H, dh), jnp.bfloat16)
+        k = jax.random.normal(rng, (B, S, G, dh), jnp.bfloat16)
+        v = jax.random.normal(rng, (B, S, G, dh), jnp.bfloat16)
+        lens = jnp.full((B,), S, jnp.int32)
+        bs = plan_block_s(S, dh, gs)
+        bytes_ = 2 * B * S * G * dh * 2
+        t0 = time.time()
+        decode_attention(q, k, v, lens).block_until_ready()
+        dt = time.time() - t0
+        rows.append(
+            f"kernel.decode_attention.B{B}S{S}G{G},{dt*1e6:.0f},"
+            f"block_s={bs};kv_bytes={bytes_};"
+            f"t_hbm_us={bytes_/HBM_BW*1e6:.1f};bound=memory")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

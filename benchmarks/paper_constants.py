@@ -1,0 +1,40 @@
+"""Published numbers from the LPU paper (targets for reproduction)."""
+
+# Fig. 7a — simulated LPU latency, ms/token (in=32, out=2016)
+PAPER_LATENCY = {
+    ("opt-1.3b", 1): 1.25,
+    ("opt-6.7b", 1): 4.62,
+    ("opt-66b", 2): 22.2,
+}
+
+# text: bandwidth utilization
+PAPER_BW_UTIL = {
+    ("opt-1.3b", 1): 0.633,
+    ("opt-30b", 1): 0.902,
+    ("opt-66b", 2): 0.906,
+}
+PAPER_GPU_BW_UTIL = {
+    ("opt-1.3b", 1): 0.289,
+    ("opt-30b", 1): 0.708,
+    ("opt-66b", 2): 0.649,
+}
+
+# Fig. 7a — GPU comparison factors
+PAPER_SPEEDUP_VS_GPU = {("opt-1.3b", 1): 2.09, ("opt-66b", 2): 1.37}
+
+# Fig. 7c — strong scaling, GPT3-20B
+PAPER_LPU_SCALING_8DEV = 5.43
+PAPER_LPU_SCALING_PER_DOUBLING = 1.75
+PAPER_DGX_SCALING_PER_DOUBLING = 1.38
+PAPER_DGX_SCALING_8DEV = 2.65
+
+# Fig. 7b — server efficiency
+PAPER_EFFICIENCY_CLOUD = 1.33      # Orion-cloud vs 2xH100, OPT-66B
+PAPER_EFFICIENCY_EDGE = 1.32       # Orion-edge vs 2xL4, OPT-6.7B
+PAPER_ORION_CLOUD_W = 608.0
+PAPER_H100_SERVER_W = 1100.0
+
+# measurement protocol
+IN_TOKENS = 32
+OUT_TOKENS = 2016
+MEAN_KV = IN_TOKENS + OUT_TOKENS // 2

@@ -1,0 +1,102 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, assigned_cells
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+from benchmarks.roofline import model_flops_per_device
+
+ARCHS = ["whisper-tiny", "qwen1.5-4b", "deepseek-coder-33b", "minicpm-2b",
+         "smollm-135m", "llava-next-34b", "granite-moe-3b-a800m",
+         "llama4-maverick-400b-a17b", "jamba-v0.1-52b", "rwkv6-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d: Path):
+    rows = {}
+    for p in d.glob("*.json"):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok" or r.get("tag"):
+            continue
+        rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return rows
+
+
+def dryrun_table(rows) -> str:
+    out = ["| arch | shape | 16x16 | 2x16x16 | compile s (1pod) | "
+           "peak GiB/dev | plan notes |",
+           "|---|---|---|---|---|---|---|"]
+    run, skip = assigned_cells()
+    skipset = {(a, s) for a, s in skip}
+    for a in ARCHS:
+        for s in SHAPE_ORDER:
+            if (a, s) in skipset:
+                out.append(f"| {a} | {s} | SKIP | SKIP | — | — | "
+                           f"full-attention arch: 512k dense KV excluded "
+                           f"(DESIGN.md §5) |")
+                continue
+            r1 = rows.get((a, s, "16x16"))
+            r2 = rows.get((a, s, "2x16x16"))
+            if not r1:
+                out.append(f"| {a} | {s} | MISSING | — | — | — | |")
+                continue
+            p = r1["plan"]
+            notes = (f"kvs={p.get('kv_shards','-')} dup={p.get('dup','-')}"
+                     + (f" ep={p.get('ep')}x{p.get('ffn_split')}"
+                        if p.get("ep") else ""))
+            out.append(
+                f"| {a} | {s} | OK | {'OK' if r2 else 'MISSING'} | "
+                f"{r1['t_compile_s']:.0f} | "
+                f"{r1['memory']['peak_bytes']/2**30:.1f} | {notes} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows) -> str:
+    out = ["| arch | shape | t_comp | t_mem | t_coll | bound | "
+           "useful/HLO flops | collectives |",
+           "|---|---|---|---|---|---|---|---|"]
+    for a in ARCHS:
+        for s in SHAPE_ORDER:
+            r = rows.get((a, s, "16x16"))
+            if not r:
+                continue
+            tc = r["flops_per_device"] / PEAK_FLOPS_BF16
+            tm = r["bytes_per_device"] / HBM_BW
+            tw = r.get("wire_bytes_per_device", 0.0) / ICI_BW
+            dom = max((tc, "compute"), (tm, "memory"),
+                      (tw, "collective"))[1]
+            mf = model_flops_per_device(a, s, 256)
+            ratio = mf / max(r["flops_per_device"], 1.0)
+            cc = r.get("coll_counts", {})
+            ccs = " ".join(f"{k.split('-')[-1]}:{int(v)}"
+                           for k, v in sorted(cc.items()))
+            def fmt(t):
+                return f"{t*1e3:.1f}ms" if t < 10 else f"{t:.1f}s"
+            out.append(
+                f"| {a} | {s} | {fmt(tc)} | {fmt(tm)} | {fmt(tw)} | "
+                f"**{dom}** | {ratio:.2f} | {ccs} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=None)
+    args = ap.parse_args()
+    d = Path(args.dir) if args.dir else \
+        Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+    rows = load(d)
+    print("### §Dry-run matrix\n")
+    print(dryrun_table(rows))
+    print("\n### §Roofline (single-pod 16x16, per device per step)\n")
+    print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

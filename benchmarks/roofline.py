@@ -1,0 +1,96 @@
+"""§Roofline — three-term roofline per (arch x shape) from dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun), computes
+    t_compute    = flops/dev   / peak
+    t_memory     = bytes/dev   / hbm_bw
+    t_collective = wire/dev    / link_bw
+identifies the dominant term, and reports MODEL_FLOPS / HLO_FLOPS (how
+much compiled compute is useful — catching padding/remat/duplication
+waste).  Single-pod (16x16) rows only, per the assignment.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_chips: int,
+                           tp: int = 16) -> float:
+    """Useful model flops per device for this cell (6ND / 2ND rule)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        total = 6.0 * cfg.active_params() * shape.tokens
+    elif shape.kind == "prefill":
+        total = 2.0 * cfg.active_params() * shape.tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * cfg.active_params() * shape.global_batch
+    # model-parallel work divides across tp; batch across the rest
+    return total / n_chips
+
+
+def load_rows(mesh: str = "16x16", tag: str = "") -> List[Dict]:
+    rows = []
+    for p in sorted(ART.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        if tag and r.get("tag") != tag:
+            continue
+        if not tag and r.get("tag"):
+            continue
+        if not r.get("esl_overlap", True):
+            continue
+        rows.append(r)
+    return rows
+
+
+def roofline_row(r: Dict) -> Dict:
+    n_chips = 1
+    for s in r["mesh"].split("x"):
+        n_chips *= int(s)
+    t_c = r["flops_per_device"] / PEAK_FLOPS_BF16
+    t_m = r["bytes_per_device"] / HBM_BW
+    t_w = r.get("wire_bytes_per_device", 0.0) / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_w}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(r["arch"], r["shape"], n_chips)
+    return {
+        "arch": r["arch"], "shape": r["shape"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_w,
+        "bottleneck": dom, "bound_s": terms[dom],
+        "model_flops": mf,
+        "useful_ratio": mf / max(r["flops_per_device"], 1.0),
+        "roofline_frac": max(t_c, t_m, t_w) and
+        terms[dom] and min(1.0, (t_c if dom == "compute" else
+                                 t_m if dom == "memory" else t_w)
+                           / sum(terms.values())),
+        "peak_gib": r["memory"]["peak_bytes"] / 2 ** 30,
+    }
+
+
+def run() -> List[str]:
+    rows = []
+    for r in load_rows():
+        rl = roofline_row(r)
+        rows.append(
+            f"roofline.{rl['arch']}.{rl['shape']},{rl['bound_s']*1e6:.0f},"
+            f"bottleneck={rl['bottleneck']};"
+            f"t_comp_ms={rl['t_compute_s']*1e3:.2f};"
+            f"t_mem_ms={rl['t_memory_s']*1e3:.2f};"
+            f"t_coll_ms={rl['t_collective_s']*1e3:.2f};"
+            f"useful_flops_ratio={rl['useful_ratio']:.3f};"
+            f"peak_GiB={rl['peak_gib']:.1f}")
+    if not rows:
+        rows.append("roofline.none,0,run repro.launch.dryrun --all first")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

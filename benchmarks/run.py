@@ -1,0 +1,29 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (us_per_call column carries the benchmark's headline scalar in
+# micro-units where noted).
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig2a_bandwidth, fig7a_latency, fig7b_efficiency,
+                            fig7c_scaling, kernels_bench, roofline)
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in (fig7a_latency, fig2a_bandwidth, fig7c_scaling,
+                fig7b_efficiency, roofline, kernels_bench):
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception:  # noqa: BLE001
+            ok = False
+            print(f"{mod.__name__},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: build a model, run the HyperDex-style generate() API.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+from repro.compiler.mapper import plan_model, summarize  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.models.registry import build_model  # noqa: E402
+from repro.serving.engine import LPUEngine  # noqa: E402
+from repro.serving.sampler import SamplingParams  # noqa: E402
+
+
+def main():
+    # any assigned arch works: --arch qwen / deepseek / jamba / rwkv6 ...
+    arch = sys.argv[sys.argv.index("--arch") + 1] \
+        if "--arch" in sys.argv else "smollm-135m"
+    cfg = get_config(arch).reduced()       # CPU-feasible reduction
+    plan = plan_model(cfg, None, (1,), "serve", esl_overlap=False,
+                      remat="none", compute_dtype="float32",
+                      param_dtype="float32")
+    print("mapper plan:", summarize(plan))
+
+    model = build_model(cfg, plan)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  ({n/1e6:.1f}M params reduced)")
+
+    engine = LPUEngine(model, params, slots=2, max_seq=64)
+    prompts = [[1, 2, 3, 4], [10, 11, 12]]
+
+    def stream(rid, tok):
+        print(f"  [stream] request {rid} -> token {tok}")
+
+    outs = engine.generate(prompts, max_new_tokens=8,
+                           params=SamplingParams(0.0, 0, 1.0),
+                           stream_cb=stream)
+    for i, o in enumerate(outs):
+        print(f"request {i}: {o}")
+    st = engine.stats
+    print(f"{st.tokens} tokens @ {st.tokens_per_s:.1f} tok/s, "
+          f"occupancy {st.occupancy:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Batched serving with mixed request lengths + continuous batching —
+the paper's datacenter scenario (many users, small individual batches).
+
+    PYTHONPATH=src python examples/serve_batched.py --requests 12
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.compiler.mapper import plan_model  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.models.registry import build_model  # noqa: E402
+from repro.serving.engine import LPUEngine  # noqa: E402
+from repro.serving.sampler import SamplingParams  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.7)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    plan = plan_model(cfg, None, (1,), "serve", esl_overlap=False,
+                      remat="none", compute_dtype="float32",
+                      param_dtype="float32")
+    model = build_model(cfg, plan)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    engine = LPUEngine(model, params, slots=args.slots, max_seq=96)
+
+    rng = np.random.RandomState(0)
+    prompts = [list(rng.randint(1, cfg.vocab_size,
+                                size=int(rng.randint(2, 14))))
+               for _ in range(args.requests)]
+    outs = engine.generate(
+        prompts, max_new_tokens=args.max_new,
+        params=SamplingParams(args.temperature, 20, 0.95))
+    st = engine.stats
+    print(f"[serve_batched] {len(outs)} requests on {args.slots} slots: "
+          f"{st.tokens} tokens, {st.tokens_per_s:.1f} tok/s, "
+          f"occupancy {st.occupancy:.2f} "
+          f"(continuous batching kept slots {st.occupancy:.0%} busy)")
+    for i, o in enumerate(outs[:3]):
+        print(f"  req{i} ({len(prompts[i])} prompt toks): {o}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""End-to-end driver: train the ~135M-param smollm config for a few
+hundred steps on the synthetic corpus, with checkpoints + auto-resume.
+
+Full-size 135M on CPU is slow; by default this trains the true config at
+a shortened sequence length (the assignment's 'train ~100M model for a
+few hundred steps' driver — pass --full-seq on real hardware).
+
+    PYTHONPATH=src python examples/train_smollm.py --steps 300
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from dataclasses import replace  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.train import run_training  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-seq", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (CI-speed)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_smollm_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-135m")
+    if args.tiny:
+        cfg = cfg.reduced()
+    seq = 2048 if args.full_seq else args.seq
+
+    _, _, losses = run_training(
+        cfg=cfg, steps=args.steps, global_batch=args.batch, seq_len=seq,
+        ckpt_dir=args.ckpt_dir, ckpt_every=50, lr=6e-4, schedule="cosine",
+        log_every=10, compute_dtype="float32", param_dtype="float32")
+    print(f"[example] loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{len(losses)} steps "
+          f"({'DECREASED' if losses[-1] < losses[0] else 'FLAT'})")
+
+
+if __name__ == "__main__":
+    main()

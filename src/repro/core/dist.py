@@ -1,0 +1,106 @@
+"""Distribution environment for fully-manual (shard_map) model execution.
+
+The whole model step runs inside one ``shard_map`` spanning the production
+mesh.  :class:`AxisEnv` carries the axis names visible inside; every
+collective in the model is explicit (ESL rings, FSDP gathers, EP
+all-to-all, loss psum) so the collective schedule is deterministic and
+auditable — the JAX analog of the LPU's compiled NET instruction stream.
+
+Degrades gracefully: with ``model=None``/empty axes all helpers become
+no-ops and the identical model code runs on one device (smoke tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclass(frozen=True)
+class AxisEnv:
+    model: Optional[str]            # tensor-parallel ring axis
+    tp: int
+    fsdp: Tuple[str, ...]           # param-gather axes (train ZeRO-3)
+    fsdp_width: int
+    dp: Tuple[str, ...]             # axes the batch is actually split over
+    kv_seq_axis: Optional[str] = None   # long-context KV sequence sharding
+    kv_seq_width: int = 1
+
+    @property
+    def dp_name(self):
+        return self.dp if self.dp else None
+
+
+def make_axis_env(plan, *, batch: Optional[int] = None) -> AxisEnv:
+    """Build the AxisEnv for a plan; batch decides usable DP axes."""
+    if plan.mesh_axes is None:
+        return AxisEnv(None, 1, (), 1, ())
+    sizes = dict(zip(plan.mesh_axes, plan.mesh_shape))
+    dp: Tuple[str, ...] = ()
+    if batch is None:
+        dp = plan.dp_axes
+    else:
+        # use the largest prefix of dp axes that divides the batch
+        width = 1
+        for a in plan.dp_axes:
+            if batch % (width * sizes[a]) == 0:
+                dp = dp + (a,)
+                width *= sizes[a]
+    fsdp = plan.fsdp_axes
+    fw = 1
+    for a in fsdp:
+        fw *= sizes[a]
+    kv_axis, kv_w = None, 1
+    if getattr(plan, "kv_seq_axis", None):
+        kv_axis = plan.kv_seq_axis
+        kv_w = sizes[kv_axis]
+    return AxisEnv(plan.tp_axis, plan.tp, fsdp, fw, dp,
+                   kv_seq_axis=kv_axis, kv_seq_width=kv_w)
+
+
+# ---------------------------------------------------------------------------
+# FSDP (ZeRO-3) parameter gathering
+# ---------------------------------------------------------------------------
+
+def fsdp_dim(shape: Sequence[int], width: int,
+             skip_dims: Sequence[int] = ()) -> Optional[int]:
+    """First dim divisible by the FSDP width (the mapper's ZeRO rule)."""
+    if width <= 1:
+        return None
+    for i, s in enumerate(shape):
+        if i in skip_dims:
+            continue
+        if s % width == 0 and s >= width:
+            return i
+    return None
+
+
+def gather_param(w: jax.Array, env: AxisEnv, dim: Optional[int]) -> jax.Array:
+    """All-gather one FSDP-sharded param (reverse-mode: grads psum-scatter
+    back to the shard automatically — ZeRO gradient sharding for free)."""
+    if dim is None or not env.fsdp or env.fsdp_width <= 1:
+        return w
+    return lax.all_gather(w, env.fsdp, axis=dim, tiled=True)
+
+
+def gather_tree(tree, env: AxisEnv, dims_tree):
+    """Gather a whole (sub)tree of params given its fsdp-dims tree."""
+    return jax.tree.map(lambda w, d: gather_param(w, env, d), tree, dims_tree,
+                        is_leaf=lambda x: x is None)
+
+
+def psum_dp(x, env: AxisEnv):
+    return lax.psum(x, env.dp) if env.dp else x
+
+
+def pmean_dp(x, env: AxisEnv):
+    return lax.pmean(x, env.dp) if env.dp else x
+
+
+def model_rank(env: AxisEnv) -> jax.Array:
+    if env.model is None:
+        return jnp.int32(0)
+    return lax.axis_index(env.model)

@@ -1,0 +1,204 @@
+"""ESL — Expandable Synchronization Link, as TPU-native collective matmuls.
+
+The paper (C2): tensor-parallel vector-matrix products are split into
+column chunks; each chunk's partial product is *immediately* streamed
+around a ring of peers while the next chunk computes, so compute,
+transmit and receive fully overlap and only a small tail remains — which
+itself hides under the next FC layer.
+
+TPU mapping: inside ``shard_map`` over the ``model`` mesh axis we
+interleave per-chunk ``dot`` ops with ring ``ppermute`` steps
+(`collective-permute` on ICI).  Two primitives cover a transformer:
+
+* :func:`ag_matmul` — column-parallel matmul consuming a *scattered*
+  activation (each rank holds D/tp of the input vector).  The input chunks
+  rotate around the ring while each rank multiplies the chunk it currently
+  holds with the matching row block of its local weight tile.  This is the
+  paper's "receive overlaps with compute".
+
+* :func:`rs_matmul` — row-parallel matmul producing a *scattered* output.
+  Each rank walks the output column blocks in ring order, adding its own
+  contribution to the partial sum it just received and passing it on: the
+  partial products stream to peers while the next chunk computes — the
+  paper's Figure 4(a) timeline, literally.
+
+Keeping activations scattered between the two (and across layer
+boundaries) is what hides the tail: the RS tail of FC2 overlaps the AG
+head of the next layer's FC1, exactly the paper's "FC1 followed by FC2"
+argument.
+
+``overlap=False`` gives the *typical processor* baseline the paper
+compares against: full matmul followed by a blocking ``psum``
+(all-reduce) / ``all_gather``.  Both modes are numerically identical —
+property-tested — and differ only in collective schedule.
+
+All functions degrade to plain local matmuls when ``axis is None``
+(single-device smoke mode).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _ring_perm(tp: int, up: bool = True):
+    if up:
+        return [(i, (i + 1) % tp) for i in range(tp)]
+    return [(i, (i - 1) % tp) for i in range(tp)]
+
+
+def _take_block(w_blocks: jax.Array, idx) -> jax.Array:
+    """w_blocks: (tp, ...) -> dynamic block select."""
+    return lax.dynamic_index_in_dim(w_blocks, idx, axis=0, keepdims=False)
+
+
+# ---------------------------------------------------------------------------
+# column-parallel: scattered input -> head/ffn-sharded output
+# ---------------------------------------------------------------------------
+
+def ag_matmul(x: jax.Array, w: jax.Array, *, axis: Optional[str], tp: int,
+              overlap: bool = True, scattered_in: Optional[bool] = None,
+              b: Optional[jax.Array] = None) -> jax.Array:
+    """y_loc = (allgather(x) @ w_loc) + b_loc.
+
+    x: (..., D/tp) scattered on the last dim when ``scattered_in`` (the ESL
+    convention), or already-full (..., D) otherwise (blocking baseline /
+    raw model inputs).  w: (D, N_loc) local column tile. -> (..., N_loc).
+    """
+    if axis is None or tp == 1:
+        y = jnp.einsum("...d,dn->...n", x, w)
+        return y + b if b is not None else y
+    if scattered_in is None:
+        scattered_in = overlap
+    if not scattered_in:
+        y = jnp.einsum("...d,dn->...n", x, w)
+        return y + b if b is not None else y
+    d_loc = x.shape[-1]
+    w_blocks = w.reshape(tp, d_loc, w.shape[-1])
+    r = lax.axis_index(axis)
+    if not overlap:
+        xf = lax.all_gather(x, axis, axis=x.ndim - 1, tiled=True)
+        y = jnp.einsum("...d,dn->...n", xf, w)
+        return y + b if b is not None else y
+    # ESL: rotate input chunks around the ring; multiply the chunk we hold.
+    acc = jnp.einsum("...d,dn->...n", x, _take_block(w_blocks, r))
+    chunk = x
+    for s in range(1, tp):
+        # stream the chunk to the next peer while the dot above executes
+        chunk = lax.ppermute(chunk, axis, _ring_perm(tp, up=True))
+        src = (r - s) % tp  # rank whose chunk we now hold
+        acc = acc + jnp.einsum("...d,dn->...n", chunk,
+                               _take_block(w_blocks, src))
+    return acc + b if b is not None else acc
+
+
+# ---------------------------------------------------------------------------
+# row-parallel: sharded input -> scattered (or replicated) output
+# ---------------------------------------------------------------------------
+
+def rs_matmul(x: jax.Array, w: jax.Array, *, axis: Optional[str], tp: int,
+              overlap: bool = True, scatter_out: bool = True,
+              b: Optional[jax.Array] = None) -> jax.Array:
+    """y = sum_over_ranks(x_loc @ w_loc), reduced across the ring.
+
+    x: (..., M_loc); w: (M_loc, D_out).  scatter_out=True returns
+    (..., D_out/tp) (reduce-scatter semantics — the ESL-native form);
+    False returns the full (..., D_out) via psum (baseline).
+    """
+    if axis is None or tp == 1:
+        y = jnp.einsum("...m,md->...d", x, w)
+        return y + b if b is not None else y
+    if not overlap:
+        y = jnp.einsum("...m,md->...d", x, w)
+        if scatter_out:
+            y = lax.psum_scatter(y, axis, scatter_dimension=y.ndim - 1,
+                                 tiled=True)
+            if b is not None:
+                y = y + _bias_slice(b, axis, tp)
+            return y
+        y = lax.psum(y, axis)
+        return y + b if b is not None else y
+    d_out = w.shape[-1]
+    c = d_out // tp
+    w_blocks = w.reshape(w.shape[0], tp, c).transpose(1, 0, 2)  # (tp, M, c)
+    r = lax.axis_index(axis)
+    # ring reduce-scatter fused with the matmul: at each step add our
+    # contribution for the block that is travelling toward its home rank.
+    acc = jnp.einsum("...m,mc->...c", x, _take_block(w_blocks, (r + 1) % tp))
+    for s in range(1, tp):
+        acc = lax.ppermute(acc, axis, _ring_perm(tp, up=False))
+        blk = (r + 1 + s) % tp
+        acc = acc + jnp.einsum("...m,mc->...c", x, _take_block(w_blocks, blk))
+    # acc now holds block r (scattered output)
+    if b is not None:
+        acc = acc + _bias_slice(b, axis, tp)
+    if scatter_out:
+        return acc
+    return lax.all_gather(acc, axis, axis=acc.ndim - 1, tiled=True)
+
+
+def _bias_slice(b: jax.Array, axis: Optional[str], tp: int) -> jax.Array:
+    if axis is None or tp == 1:
+        return b
+    r = lax.axis_index(axis)
+    c = b.shape[-1] // tp
+    return lax.dynamic_slice_in_dim(b, r * c, c, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# helpers for scattered-activation mode
+# ---------------------------------------------------------------------------
+
+def gather_scattered(x: jax.Array, *, axis: Optional[str],
+                     tp: int) -> jax.Array:
+    """(..., D/tp) -> (..., D): explicit all-gather (used at mode edges)."""
+    if axis is None or tp == 1:
+        return x
+    return lax.all_gather(x, axis, axis=x.ndim - 1, tiled=True)
+
+
+def scatter_full(x: jax.Array, *, axis: Optional[str], tp: int) -> jax.Array:
+    """(..., D) -> (..., D/tp): slice the local shard of a replicated array."""
+    if axis is None or tp == 1:
+        return x
+    r = lax.axis_index(axis)
+    c = x.shape[-1] // tp
+    return lax.dynamic_slice_in_dim(x, r * c, c, axis=-1)
+
+
+def vec_slice(v: jax.Array, *, axis: Optional[str], tp: int) -> jax.Array:
+    """Local shard of a replicated vector parameter (norm scales etc.)."""
+    return scatter_full(v, axis=axis, tp=tp)
+
+
+def full_vec(v: jax.Array, *, axis: Optional[str], tp: int,
+             scattered_activations: bool) -> jax.Array:
+    """Vector params are stored model-sharded (rule 'vec'); in scattered
+    mode the local shard is exactly what elementwise ops need; in the
+    blocking baseline (full activations) gather it."""
+    if axis is None or tp == 1 or scattered_activations:
+        return v
+    return lax.all_gather(v, axis, axis=v.ndim - 1, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# collective-latency accounting (consumed by core.latency_model)
+# ---------------------------------------------------------------------------
+
+def sync_bytes_per_token(d_model: int, tp: int, dtype_bytes: int = 2,
+                         overlap: bool = True) -> dict:
+    """Wire bytes/activation-vector for one row-parallel sync on a ring.
+
+    ring all-reduce moves 2*(tp-1)/tp * D bytes per device; the ESL form
+    (RS while computing + AG folded into the next layer's ag_matmul) moves
+    the same bytes but off the critical path — only the tail (one chunk
+    hop, D/tp bytes) remains serialized.
+    """
+    full = d_model * dtype_bytes
+    wire = 2 * (tp - 1) / tp * full
+    exposed = (full / tp) if overlap else wire
+    return {"wire_bytes": wire, "exposed_bytes": exposed}

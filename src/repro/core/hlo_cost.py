@@ -1,0 +1,328 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+``Compiled.cost_analysis()`` counts a ``while`` body exactly once, so any
+scan-over-layers (or chunked flash-attention scan) is undercounted by its
+trip count.  This parser rebuilds per-computation costs from the HLO text
+and multiplies each while body by its trip count (recovered from the loop
+condition's comparison constant), nesting included.
+
+Per-computation terms:
+* flops        — dot/convolution ops (symbol-table lookup for operand
+                 shapes): 2 * prod(result) * prod(contracted dims).
+* hbm_bytes    — sum over *top-level* instructions of result+operand
+                 bytes for memory-touching op kinds (fusion internals
+                 stay in registers/VMEM, matching XLA's accounting).
+* wire_bytes   — ring-algorithm wire bytes of every collective.
+
+Validated against ``cost_analysis()`` on fully-unrolled modules (no
+whiles), where both must agree on flops (tests/test_hlo_cost.py).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0,
+}
+
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_KIND_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_HBM_KINDS = {
+    "fusion", "dot", "copy", "copy-start", "all-reduce", "all-gather",
+    "reduce-scatter", "all-to-all", "collective-permute", "dynamic-slice",
+    "dynamic-update-slice", "convolution", "sort", "gather", "scatter",
+    "transpose", "concatenate", "pad", "reduce", "convert", "broadcast",
+    "slice", "select", "add", "multiply", "subtract", "exponential",
+    "custom-call", "rng-bit-generator", "compare", "divide", "tanh",
+    "rsqrt", "maximum", "minimum",
+}
+for _c in list(_COLLECTIVES):
+    _HBM_KINDS.add(_c + "-start")
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.wire_bytes += o.wire_bytes
+        for k, v in o.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v
+        return self
+
+    def scaled(self, t: float) -> "Cost":
+        return Cost(self.flops * t, self.hbm_bytes * t, self.wire_bytes * t,
+                    {k: v * t for k, v in self.coll_counts.items()})
+
+    def row(self) -> Dict[str, float]:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "wire_bytes": self.wire_bytes,
+                "coll_counts": dict(self.coll_counts)}
+
+
+@dataclass
+class _Instr:
+    name: str
+    kind: str
+    result_shapes: List[Tuple[str, str]]
+    operands: List[str]
+    line: str
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _parse_computations(text: str) -> Dict[str, List[_Instr]]:
+    comps: Dict[str, List[_Instr]] = {}
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            # header: `%name (params) -> type {` (may contain /*index=N*/)
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\{\s*$", line)
+            if m and not re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=", line):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _ASSIGN_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        km = _KIND_RE.search(rhs)
+        if not km:
+            continue
+        kind = km.group(1)
+        result_part = rhs[:km.start()]
+        result_shapes = _SHAPE_RE.findall(result_part)
+        rest = rhs[km.end():]
+        args_part = rest.split("), ")[0] if "), " in rest else rest
+        operands = _OPERAND_RE.findall(args_part)
+        comps[cur].append(
+            _Instr(name, kind, result_shapes, operands, line))
+    return comps
+
+
+def _first_shape_bytes(shapes: List[Tuple[str, str]]) -> int:
+    return sum(_shape_bytes(dt, dm) for dt, dm in shapes)
+
+
+def _collective_wire(kind: str, rbytes: float, line: str,
+                     default_group: int) -> float:
+    g = default_group
+    m = _GROUPS_RE.search(line)
+    if m:
+        g = len(m.group(1).split(","))
+    else:
+        m2 = _GROUPS2_RE.search(line)
+        if m2:
+            g = int(m2.group(2))
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / max(g, 1) * rbytes
+    if kind == "all-gather":
+        return (g - 1) / max(g, 1) * rbytes
+    if kind == "reduce-scatter":
+        return (g - 1) * rbytes
+    if kind == "all-to-all":
+        return (g - 1) / max(g, 1) * rbytes
+    return float(rbytes)
+
+
+def module_cost(text: str, default_group: int = 1) -> Cost:
+    comps = _parse_computations(text)
+    # symbol tables: per computation, name -> result shapes
+    tables: Dict[str, Dict[str, List[Tuple[str, str]]]] = {
+        c: {i.name: i.result_shapes for i in instrs}
+        for c, instrs in comps.items()
+    }
+    memo: Dict[str, Cost] = {}
+    kinds: Dict[str, Dict[str, str]] = {
+        c: {i.name: i.kind for i in instrs} for c, instrs in comps.items()
+    }
+    # computations reached as while bodies (carry copies elidable there)
+    while_bodies = set()
+    for instrs in comps.values():
+        for i in instrs:
+            if i.kind == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", i.line)
+                if mb:
+                    while_bodies.add(mb.group(1))
+
+    def dot_flops(ins: _Instr, table) -> float:
+        out = 1
+        for dt, dm in ins.result_shapes:
+            for d in dm.split(","):
+                if d:
+                    out *= int(d)
+        lhs_shapes = table.get(ins.operands[0] if ins.operands else "", [])
+        if not lhs_shapes:
+            return 0.0
+        lhs = [int(d) for d in lhs_shapes[0][1].split(",") if d]
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+        contract = 1
+        if m and m.group(1):
+            for i in m.group(1).split(","):
+                if int(i) < len(lhs):
+                    contract *= lhs[int(i)]
+        return 2.0 * out * contract
+
+    def conv_flops(ins: _Instr, table) -> float:
+        out = 1
+        for dt, dm in ins.result_shapes:
+            for d in dm.split(","):
+                if d:
+                    out *= int(d)
+        if len(ins.operands) < 2:
+            return 0.0
+        ker_shapes = table.get(ins.operands[1], [])
+        if not ker_shapes:
+            return 0.0
+        ker = [int(d) for d in ker_shapes[0][1].split(",") if d]
+        k = 1
+        for d in ker[:-1]:
+            k *= d
+        return 2.0 * out * k
+
+    def _sliced_params(ins: _Instr) -> Dict[int, int]:
+        """fusion operand index -> bytes actually read, for operands the
+        fused computation only dynamic-slices (stacked scan xs etc.)."""
+        m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+        if not m or m.group(1) not in comps:
+            return {}
+        called = comps[m.group(1)]
+        ctable = tables[m.group(1)]
+        param_idx = {i.name: int(re.search(r"parameter\((\d+)\)",
+                                           i.line).group(1))
+                     for i in called if i.kind == "parameter"}
+        out: Dict[int, int] = {}
+        consumed: Dict[str, List[int]] = {}
+        for i in called:
+            for op in i.operands:
+                consumed.setdefault(op, []).append(0)
+        for i in called:
+            if i.kind != "dynamic-slice" or not i.operands:
+                continue
+            src = i.operands[0]
+            if src in param_idx and len(consumed.get(src, [])) == 1:
+                out[param_idx[src]] = _first_shape_bytes(i.result_shapes)
+        return out
+
+    def trip_count(cond: str) -> int:
+        best = 1
+        for ins in comps.get(cond, []):
+            for m in _CONST_RE.finditer(ins.line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    def comp_cost(name: str, stack=()) -> Cost:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return Cost()
+        table = tables[name]
+        kt = kinds[name]
+        total = Cost()
+        for ins in comps[name]:
+            kind = ins.kind
+            if kind == "copy" and name in while_bodies and ins.operands:
+                src_kind = kt.get(ins.operands[0])
+                consumers = [j for j in comps[name]
+                             if ins.name in j.operands]
+                inplace_sink = consumers and all(
+                    j.kind in ("tuple", "copy")
+                    or "scatter" in j.name
+                    or "dynamic-update-slice" in j.name
+                    for j in consumers)
+                if (src_kind in ("get-tuple-element", "parameter")
+                        or inplace_sink):
+                    # while-carry / scatter-destination bookkeeping copy:
+                    # elided by TPU buffer assignment (in-place loop
+                    # carries + aliased scatter); not HBM traffic
+                    continue
+            if kind == "dot":
+                total += Cost(flops=dot_flops(ins, table))
+            elif kind == "convolution":
+                total += Cost(flops=conv_flops(ins, table))
+            base = kind.replace("-start", "")
+            if base in _COLLECTIVES:
+                rb = _first_shape_bytes(ins.result_shapes)
+                total += Cost(
+                    wire_bytes=_collective_wire(base, rb, ins.line,
+                                                default_group),
+                    coll_counts={base: 1})
+            if kind in _HBM_KINDS:
+                if ("dynamic-update-slice" in ins.name
+                        or kind in ("dynamic-update-slice", "scatter")
+                        or "scatter" in ins.name):
+                    # in-place update (DUS / scatter): traffic = read+write
+                    # of the updated region (the non-destination operands),
+                    # not the aliased destination buffer
+                    sizes = sorted((_first_shape_bytes(table[op])
+                                    for op in ins.operands if op in table),
+                                   reverse=True)
+                    upd = sum(sizes[1:]) if len(sizes) > 1 else \
+                        (sizes[0] if sizes else 0)
+                    total += Cost(hbm_bytes=2 * upd)
+                else:
+                    b = _first_shape_bytes(ins.result_shapes)
+                    sliced = _sliced_params(ins) if kind == "fusion" else {}
+                    for idx, op in enumerate(ins.operands):
+                        if op not in table:
+                            continue
+                        if idx in sliced:
+                            # the fused computation dynamic-slices this
+                            # operand: traffic = the slice, not the buffer
+                            b += sliced[idx]
+                        else:
+                            b += _first_shape_bytes(table[op])
+                    total += Cost(hbm_bytes=b)
+            if kind == "while":
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                trips = trip_count(mc.group(1)) if mc else 1
+                if mb:
+                    total += comp_cost(mb.group(1),
+                                       stack + (name,)).scaled(trips)
+            elif kind in ("fusion", "call", "custom-call", "conditional"):
+                for called in re.findall(
+                        r"(?:calls|to_apply|branch_computations)=\{?%?([\w.\-]+)",
+                        ins.line):
+                    sub = comp_cost(called, stack + (name,))
+                    total += Cost(flops=sub.flops,
+                                  wire_bytes=sub.wire_bytes,
+                                  coll_counts=dict(sub.coll_counts))
+        memo[name] = total
+        return total
+
+    entry = None
+    for cand in comps:
+        if cand.startswith("main"):
+            entry = cand
+            break
+    if entry is None and comps:
+        entry = max(comps, key=lambda k: len(comps[k]))
+    return comp_cost(entry) if entry else Cost()

@@ -1,0 +1,320 @@
+"""Step builders: wrap the pure model functions in shard_map + jit.
+
+This is the "instruction generation" layer of the HyperDex analog: given
+(model, mesh, shape) it emits the compiled programs —
+
+* ``train_step``   — fwd + bwd (manual ZeRO-3 gathers, ESL rings) +
+                     optimizer update (elementwise on sharded state).
+* ``prefill_step`` — summarization stage: builds the KV cache.
+* ``serve_step``   — generation stage: one token against the cache
+                     (greedy head; the engine's sampled variant takes rng).
+
+All collectives are explicit inside one shard_map spanning the mesh; the
+optimizer update runs outside (elementwise on identically-sharded trees).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist import AxisEnv, gather_param, make_axis_env, psum_dp
+from repro.models.transformer import sharded_xent
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# FSDP bookkeeping derived from the mapper's specs
+# ---------------------------------------------------------------------------
+
+def fsdp_dims_tree(specs, plan):
+    """Per-leaf index of the FSDP-sharded dim (None if not FSDP'd)."""
+    fsdp = tuple(plan.fsdp_axes)
+
+    def leaf_dim(spec):
+        if not fsdp:
+            return None
+        for i, e in enumerate(spec):
+            if e == fsdp or e == (fsdp if len(fsdp) > 1 else fsdp[0]):
+                return i
+            if isinstance(e, tuple) and tuple(e) == fsdp:
+                return i
+            if isinstance(e, str) and (e,) == fsdp:
+                return i
+        return None
+
+    return jax.tree.map(leaf_dim, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _drop_lead(dims):
+    """Stacked-block dims -> dims after lax.scan slices the lead axis."""
+    return jax.tree.map(lambda d: None if d is None else d - 1, dims,
+                        is_leaf=lambda x: x is None or isinstance(x, int))
+
+
+def make_gather_fn(plan, env: AxisEnv, specs):
+    """gather_fn(group, subtree) closing over per-group fsdp-dim trees."""
+    dims_full = fsdp_dims_tree(specs, plan)
+    groups: Dict[str, Any] = {}
+    for key in ("blocks", "enc_blocks", "dec_blocks"):
+        if isinstance(dims_full, dict) and key in dims_full:
+            groups[{"blocks": "block", "enc_blocks": "enc_block",
+                    "dec_blocks": "dec_block"}[key]] = \
+                _drop_lead(dims_full[key])
+    emb = {k: v for k, v in dims_full.items()
+           if k in ("embed", "embed_in", "head", "pos_embed", "projector")}
+    groups["embed"] = emb
+
+    cdt = jnp.dtype(plan.compute_dtype)
+
+    def gather_cast(w, d):
+        w = gather_param(w, env, d)
+        if jnp.issubdtype(w.dtype, jnp.floating) and w.dtype != cdt:
+            w = w.astype(cdt)          # master stays f32; compute in bf16
+        return w
+
+    def gather_fn(group: str, subtree):
+        dims = groups[group]
+        if group == "embed":
+            dims = {k: dims[k] for k in subtree}
+        return jax.tree.map(gather_cast, subtree, dims,
+                            is_leaf=lambda x: x is None or isinstance(x, int))
+
+    return gather_fn
+
+
+def _sync_grads(grads, dims, env: AxisEnv, compress_pod: bool = False):
+    """Replicated-over-dp leaves need an explicit psum; FSDP'd leaves are
+    already reduce-scattered by the all_gather transpose.
+
+    ``compress_pod``: when 'pod' is among the dp axes, its share of the
+    sync runs as an int8+error-feedback all-reduce (DCI is ~8x slower
+    than ICI); the intra-pod share stays full-precision.
+    """
+    from repro.optim.adamw import compressed_psum
+
+    pod_in_dp = compress_pod and "pod" in env.dp
+    intra = tuple(a for a in env.dp if a != "pod") if pod_in_dp else env.dp
+
+    def sync(g, d):
+        if d is not None:
+            return g
+        if not pod_in_dp:
+            return psum_dp(g, env)
+        if intra:
+            g = jax.lax.psum(g, intra)
+        g, _err = compressed_psum(g, "pod")   # residual fed back per step
+        return g
+    return jax.tree.map(sync, grads, dims,
+                        is_leaf=lambda x: x is None or isinstance(x, int))
+
+
+# ---------------------------------------------------------------------------
+# batch specs / input specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(model, env: AxisEnv, kind: str):
+    dp = tuple(env.dp) if env.dp else None
+    cfg = model.cfg
+    s: Dict[str, P] = {"tokens": P(dp, None)}
+    if kind == "train":
+        s["labels"] = P(dp, None)
+    if kind in ("decode",):
+        s["positions"] = P(dp)
+    if cfg.family == "encdec" and kind != "decode":
+        s["frames"] = P(dp, None, None)
+    if cfg.family == "vlm" and kind != "decode":
+        s["patch_embeds"] = P(dp, None, None)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(model, optimizer, mesh, global_batch: int,
+                     aux_weight: float = 0.01, accum_steps: int = 1,
+                     compress_pod_grads: bool = False):
+    """fwd+bwd (+ microbatched gradient accumulation) + optimizer.
+
+    ``accum_steps > 1``: the per-device batch is split into microbatches
+    scanned sequentially with an f32 gradient accumulator — the standard
+    remedy when the assigned global batch exceeds per-device activation
+    memory (EXPERIMENTS.md §Dry-run memory-fit note).
+
+    ``compress_pod_grads``: int8 + error-feedback all-reduce for the
+    replicated-parameter gradient sync on the slow cross-pod axis
+    (optim/adamw.py::compressed_psum); FSDP'd parameters already sync via
+    the all-gather transpose on intra-pod links.
+    """
+    cfg, plan = model.cfg, model.plan
+    env = make_axis_env(plan, batch=global_batch)
+    specs, _ = model.param_specs()
+    dims = fsdp_dims_tree(specs, plan)
+    bspecs = batch_specs(model, env, "train")
+
+    def inner(params, batch):
+        gather_fn = make_gather_fn(plan, env, specs)
+
+        def loss_fn(p, mb):
+            logits, _, aux = model.forward(
+                p, mb["tokens"], env=env, mode="train",
+                frames=mb.get("frames"),
+                patch_embeds=mb.get("patch_embeds"),
+                gather_fn=gather_fn)
+            labels = mb["labels"]
+            if "patch_embeds" in mb:
+                # image prefix carries no next-token loss
+                pad = jnp.full(mb["patch_embeds"].shape[:2], -1,
+                               labels.dtype)
+                labels = jnp.concatenate([pad, labels], axis=1)
+            lsum, cnt = sharded_xent(logits, labels, env)
+            lsum, cnt = psum_dp(lsum, env), psum_dp(cnt, env)
+            loss = lsum / jnp.maximum(cnt, 1.0)
+            aux_m = aux / max(cfg.n_layers, 1)
+            total = loss + aux_weight * aux_m
+            return total, (loss, aux_m)
+
+        if accum_steps <= 1:
+            grads, (loss, aux) = jax.grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            def split_mb(t):
+                b = t.shape[0]
+                assert b % accum_steps == 0, (b, accum_steps)
+                return t.reshape(accum_steps, b // accum_steps,
+                                 *t.shape[1:])
+            mbs = {k: split_mb(v) for k, v in batch.items()}
+
+            def acc_body(carry, mb):
+                g_acc, loss_acc, aux_acc = carry
+                g, (l, a) = jax.grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda x, y: x + y.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + l, aux_acc + a), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_body, (g0, jnp.float32(0), jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss, aux = loss / accum_steps, aux / accum_steps
+
+        grads = _sync_grads(grads, dims, env,
+                            compress_pod=compress_pod_grads)
+        return grads, {"loss": loss, "aux": aux}
+
+    if mesh is not None:
+        inner_sm = jax.shard_map(
+            inner, mesh=mesh, in_specs=(specs, bspecs),
+            out_specs=(specs, {"loss": P(), "aux": P()}), check_vma=False)
+    else:
+        inner_sm = inner
+
+    def step(params, opt_state, batch):
+        grads, metrics = inner_sm(params, batch)
+        params, opt_state, gmetrics = optimizer.apply(params, grads,
+                                                      opt_state)
+        metrics.update(gmetrics)
+        return params, opt_state, metrics
+
+    return step, {"param_specs": specs, "batch_specs": bspecs, "env": env}
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def _greedy(logits, env: AxisEnv):
+    """(B,1,Vloc) vocab-sharded -> (B,) global argmax token ids."""
+    lg = logits[:, -1].astype(jnp.float32)
+    v_loc = lg.shape[-1]
+    loc_idx = jnp.argmax(lg, -1)
+    loc_val = jnp.max(lg, -1)
+    if env.model is None:
+        return loc_idx.astype(jnp.int32)
+    r = lax.axis_index(env.model)
+    glob = loc_idx + r * v_loc
+    vals = lax.all_gather(loc_val, env.model, axis=1)      # (B, tp)
+    globs = lax.all_gather(glob, env.model, axis=1)        # (B, tp)
+    best = jnp.argmax(vals, -1)
+    return jnp.take_along_axis(globs, best[:, None], 1)[:, 0].astype(jnp.int32)
+
+
+def build_serve_step(model, mesh, batch: int, max_seq: int):
+    """One-token generation step (the LPU's target loop)."""
+    cfg, plan = model.cfg, model.plan
+    env = make_axis_env(plan, batch=batch)
+    specs, _ = model.param_specs()
+    cspecs = model.cache_specs(env)
+    bspecs = batch_specs(model, env, "decode")
+
+    def inner(params, cache, tokens, positions):
+        gather_fn = make_gather_fn(plan, env, specs)
+        logits, new_cache, _ = model.forward(
+            params, tokens, env=env, mode="decode", positions=positions,
+            cache=cache, gather_fn=gather_fn)
+        nxt = _greedy(logits, env)
+        return nxt, new_cache
+
+    if mesh is not None:
+        dp = tuple(env.dp) if env.dp else None
+        inner_sm = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(specs, cspecs, bspecs["tokens"], bspecs["positions"]),
+            out_specs=(P(dp), cspecs), check_vma=False)
+    else:
+        inner_sm = inner
+
+    return inner_sm, {"param_specs": specs, "cache_specs": cspecs,
+                      "batch_specs": bspecs, "env": env}
+
+
+def build_prefill_step(model, mesh, batch: int, max_seq: int):
+    """Summarization stage: consume the prompt, emit cache + last logits."""
+    cfg, plan = model.cfg, model.plan
+    env = make_axis_env(plan, batch=batch)
+    specs, _ = model.param_specs()
+    cspecs = model.cache_specs(env)
+    bspecs = batch_specs(model, env, "prefill")
+
+    def inner(params, cache, tokens, frames, patch_embeds):
+        gather_fn = make_gather_fn(plan, env, specs)
+        # dummy scalars stand in for absent modality inputs (shard_map
+        # needs a static arg list); route None for non-matching families
+        frames = frames if cfg.family == "encdec" else None
+        patch_embeds = patch_embeds if cfg.family == "vlm" else None
+        logits, new_cache, _ = model.forward(
+            params, tokens, env=env, mode="prefill", cache=cache,
+            frames=frames, patch_embeds=patch_embeds, gather_fn=gather_fn)
+        nxt = _greedy(logits, env)
+        return nxt, new_cache
+
+    if mesh is not None:
+        dp = tuple(env.dp) if env.dp else None
+        fspec = bspecs.get("frames", P())
+        pspec = bspecs.get("patch_embeds", P())
+        inner_sm = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(specs, cspecs, bspecs["tokens"], fspec, pspec),
+            out_specs=(P(dp), cspecs), check_vma=False)
+
+        def wrapped(params, cache, tokens, frames=None, patch_embeds=None):
+            frames = frames if frames is not None else jnp.zeros((), jnp.bfloat16)
+            patch_embeds = (patch_embeds if patch_embeds is not None
+                            else jnp.zeros((), jnp.bfloat16))
+            return inner_sm(params, cache, tokens, frames, patch_embeds)
+        return wrapped, {"param_specs": specs, "cache_specs": cspecs,
+                         "batch_specs": bspecs, "env": env}
+
+    def wrapped_local(params, cache, tokens, frames=None, patch_embeds=None):
+        return inner(params, cache, tokens, frames, patch_embeds)
+    return wrapped_local, {"param_specs": specs, "cache_specs": cspecs,
+                           "batch_specs": bspecs, "env": env}

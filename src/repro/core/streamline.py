@@ -1,0 +1,109 @@
+"""Streamlined decode engine (C1) — kernel-backed generation step.
+
+The LPU's thesis: generation-stage latency == weight-stream time, so the
+decode path must be a chain of bandwidth-saturating streamed ops with
+zero reshaping between them.  This module is that chain on TPU:
+
+    gemv(QKV, fused)  ->  decode_attention (fused flash, SXE||VXE)
+ -> gemv(O) -> gemv(FC1 gate|up, fused) -> gemv(FC2)
+
+Every matmul is the Pallas GEMV (``kernels/gemv``) whose BlockSpecs
+realize the ``I x v x 2B x freq = BW`` balance; attention is the fused
+``kernels/decode_attention``.  ``use_kernels=False`` routes to the jnp
+oracles — bit-compatible (tests/test_streamline.py), used by the
+dry-run so XLA's fusion stands in for the hand kernels on CPU.
+
+This is the single-device inner loop; the ESL ring (core/esl.py) wraps
+it for tensor parallelism (the kernels consume rank-local tiles).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.gemv.ops import gemv
+from repro.models.common import apply_norm, apply_rope
+
+Params = Dict[str, jax.Array]
+
+
+def _mm(x2d: jax.Array, w: jax.Array, b: Optional[jax.Array], *,
+        use_kernels: bool, interpret: bool = True) -> jax.Array:
+    return gemv(x2d, w, b, use_pallas=use_kernels, interpret=interpret)
+
+
+def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                 positions: jax.Array, *, cfg, plan,
+                 use_kernels: bool = True, interpret: bool = True
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decoder layer, one token, single device (tp folded outside).
+
+    x: (B, D); cache: {'k','v': (B, S, G, dh)}; positions: (B,).
+    Returns (y (B, D), new cache).  Weights in the mapper's stored layout.
+    """
+    a = plan.attn
+    B, D = x.shape
+    qpr, kpr, dh = a.q_per_rank, a.kv_per_rank, a.d_head
+
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    wq = p["attn"]["wq"].reshape(D, qpr * dh)
+    wk = p["attn"]["wk"].reshape(D, kpr * dh)
+    wv = p["attn"]["wv"].reshape(D, kpr * dh)
+    wqkv = jnp.concatenate([wq, wk, wv], -1)     # ONE weight stream (C1)
+    bqkv = None
+    if "bq" in p["attn"]:
+        bqkv = jnp.concatenate([p["attn"][k].reshape(-1)
+                                for k in ("bq", "bk", "bv")])
+    qkv = _mm(h, wqkv, bqkv, use_kernels=use_kernels, interpret=interpret)
+    q, k_new, v_new = jnp.split(qkv, [qpr * dh, (qpr + kpr) * dh], -1)
+    q = q.reshape(B, qpr, dh)
+    k_new = k_new.reshape(B, kpr, dh)
+    v_new = v_new.reshape(B, kpr, dh)
+    if cfg.positional == "rope":
+        q = apply_rope(q[:, None], positions[:, None],
+                       cfg.rope_theta)[:, 0]
+        k_new = apply_rope(k_new[:, None], positions[:, None],
+                           cfg.rope_theta)[:, 0]
+
+    def upd(c, n, pos):
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, n[None].astype(c.dtype), pos, axis=0)
+    kc = jax.vmap(upd)(cache["k"], k_new, positions)
+    vc = jax.vmap(upd)(cache["v"], v_new, positions)
+
+    attn = decode_attention(q, kc, vc, positions + 1,
+                            use_pallas=use_kernels, interpret=interpret)
+    wo = p["attn"]["wo"].reshape(qpr * dh, D)
+    x = x + _mm(attn.reshape(B, -1), wo, None, use_kernels=use_kernels,
+                interpret=interpret)
+
+    h = apply_norm(p["ln2"], x, cfg.norm)
+    if "wg" in p["mlp"]:
+        w1 = jnp.concatenate([p["mlp"]["wg"], p["mlp"]["wu"]], -1)
+        gu = _mm(h, w1, None, use_kernels=use_kernels, interpret=interpret)
+        g, u = jnp.split(gu, 2, -1)
+        act = jax.nn.silu(g) * u if cfg.activation == "silu" else \
+            jax.nn.gelu(g) * u
+    else:
+        act = _mm(h, p["mlp"]["wi"], p["mlp"].get("bi"),
+                  use_kernels=use_kernels, interpret=interpret)
+        act = jax.nn.relu(act) if cfg.activation == "relu" else \
+            jax.nn.gelu(act)
+    y = _mm(act, p["mlp"]["wd"], p["mlp"].get("bd"),
+            use_kernels=use_kernels, interpret=interpret)
+    return x + y, {"k": kc, "v": vc}
+
+
+def stream_bytes_per_layer(cfg, plan, kv_len: int) -> int:
+    """Analytic bytes streamed per token per layer (latency model input)."""
+    a = plan.attn
+    d = cfg.d_model
+    wbytes = 2 * (d * (a.hp + 2 * a.gp) * a.d_head // plan.tp
+                  + a.hp * a.d_head * d // plan.tp)
+    n_mat = 3 if cfg.mlp_gated else 2
+    wbytes += 2 * n_mat * d * plan.d_ff_padded // plan.tp
+    kv_bytes = 2 * 2 * kv_len * (a.gp // plan.tp) * a.d_head
+    return wbytes + kv_bytes

@@ -1,0 +1,98 @@
+"""Fused decode attention — the SXE∥VXE dual-path timeline (Fig. 3b).
+
+One generated token attends a streamed KV cache.  The paper's dataflow:
+the Key tile streams into the matmul path (SXE) producing a Score, the
+softmax (VXE) of tile *i* runs while tile *i+1*'s dot executes, and the
+Value product accumulates output-stationary.  On TPU the same overlap
+falls out of a single fused kernel: MXU dots and VPU exp/max/sum issue
+concurrently per KV tile with an online-softmax carry in VMEM scratch.
+
+Grid: (B, G, S_tiles) — S minor, so the carry (m, l, acc) lives in
+scratch across the KV stream.  GQA: all ``gs`` query heads of a KV head
+are processed together, so each KV tile is read exactly once per group —
+and the cache layout is already (seq-major, head-minor), the mapper's
+"natural transpose": no transpose op ever materializes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, s_tiles: int, block_s: int,
+                   scale: float):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (gs, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (block_s, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (gs,S_blk)
+    length = len_ref[0]
+    pos = t * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, -1e30)
+
+    m_prev = m_ref[...]                                  # (gs, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (gs, dh)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(t == s_tiles - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            lengths: jax.Array, *, block_s: int = 512,
+                            interpret: bool = True) -> jax.Array:
+    """q: (B,H,dh); k,v: (B,S,G,dh) with H = G*gs (block-regular GQA);
+    lengths: (B,) valid cache length.  Returns (B,H,dh)."""
+    B, H, dh = q.shape
+    _, S, G, _ = k.shape
+    assert H % G == 0, (H, G)
+    gs = H // G
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    s_tiles = S // block_s
+    qg = q.reshape(B * G, gs, dh)
+
+    kernel = functools.partial(_decode_kernel, s_tiles=s_tiles,
+                               block_s=block_s,
+                               scale=1.0 / math.sqrt(dh))
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, G, s_tiles),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, g, t: (b,)),
+            pl.BlockSpec((1, gs, dh), lambda b, g, t: (b * G + g, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, dh), lambda b, g, t: (b, t, g, 0)),
+            pl.BlockSpec((1, block_s, 1, dh), lambda b, g, t: (b, t, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, gs, dh), lambda b, g, t: (b * G + g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * G, gs, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((gs, 1), jnp.float32),
+            pltpu.VMEM((gs, 1), jnp.float32),
+            pltpu.VMEM((gs, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(B, H, dh)

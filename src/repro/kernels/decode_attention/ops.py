@@ -1,0 +1,49 @@
+"""jit'd wrapper for fused decode attention with KV-tile planning.
+
+``block_s`` sizing: the KV stream tile is (block_s, dh) per K and V; the
+kernel is bandwidth-bound (intensity ~ 1 flop/byte), so like the GEMV we
+choose the largest 128-aligned tile fitting the double-buffered VMEM
+budget — keeping the cache stream saturated is the whole game.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import \
+    decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+LANE = 128
+VMEM_BUDGET = 32 * 2 ** 20
+
+
+def plan_block_s(S: int, dh: int, gs: int, dtype_bytes: int = 2) -> int:
+    bs = min(S, 4096)
+    while bs > LANE:
+        tile = 2 * bs * dh * dtype_bytes * 2     # K+V, double-buffered
+        if S % bs == 0 and tile <= VMEM_BUDGET:
+            return bs
+        bs //= 2
+    return max(LANE, bs)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, use_pallas: bool = True,
+                     interpret: bool = True) -> jax.Array:
+    """q: (B,H,dh); k,v: (B,S,G,dh); lengths: (B,) -> (B,H,dh)."""
+    B, H, dh = q.shape
+    S, G = k.shape[1], k.shape[2]
+    if (not use_pallas) or H % G or S % LANE or dh % LANE:
+        # oracle fallback (expand KV to H heads)
+        gs = max(H // G, 1)
+        ke = jnp.repeat(k, gs, axis=2)[:, :, :H]
+        ve = jnp.repeat(v, gs, axis=2)[:, :, :H]
+        return decode_attention_ref(q, ke, ve, lengths)
+    bs = plan_block_s(S, dh, H // G, k.dtype.itemsize)
+    return decode_attention_pallas(q, k, v, lengths, block_s=bs,
+                                   interpret=interpret)

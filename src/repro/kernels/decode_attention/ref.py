@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for fused decode (flash-decode) attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """q: (B,H,dh); k,v: (B,S,H,dh); lengths: (B,) valid cache length.
+
+    Softmax over positions [0, length); f32 accumulation.
+    """
+    B, S, H, dh = k.shape
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, jnp.finfo(jnp.float32).min / 2)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,62 @@
+"""jit'd wrapper + tile planner for the decode GEMV kernel.
+
+``plan_blocks`` realizes the LPU balance condition on TPU: pick the
+largest (K_blk, N_blk) weight window that (a) fits the VMEM budget with
+double-buffering and (b) keeps both dims 128-aligned so the MXU runs at
+full tile occupancy.  The weight stream then saturates HBM — arithmetic
+intensity of GEMV is ~1 flop/byte, far below the ridge, so bandwidth is
+the roofline and the only job of the BlockSpec is to never stall the
+stream.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gemv.gemv import gemv_pallas
+from repro.kernels.gemv.ref import gemv_ref
+
+VMEM_BYTES = 64 * 2 ** 20          # ~64 MiB/core budget (v5e: 128 MiB/chip)
+LANE = 128
+
+
+def plan_blocks(B: int, K: int, N: int, dtype_bytes: int = 2,
+                vmem_budget: int = VMEM_BYTES // 2) -> Tuple[int, int]:
+    """Largest aligned (block_k, block_n) with 2x buffering in budget."""
+    def fits(bk, bn):
+        w_tile = bk * bn * dtype_bytes * 2          # double-buffered stream
+        x_tile = B * bk * dtype_bytes
+        acc = B * bn * 4
+        return w_tile + x_tile + acc <= vmem_budget
+
+    best = (LANE, LANE)
+    bk = min(K, 2048)
+    while bk >= LANE:
+        if K % bk == 0:
+            bn = min(N, 2048)
+            while bn >= LANE:
+                if N % bn == 0 and fits(bk, bn):
+                    if bk * bn > best[0] * best[1]:
+                        best = (bk, bn)
+                    break
+                bn //= 2
+        bk //= 2
+    return best
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gemv(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None, *,
+         use_pallas: bool = True, interpret: bool = True) -> jax.Array:
+    """Decode GEMV: (B,K) x (K,N) -> (B,N), f32 accumulation."""
+    if not use_pallas:
+        return gemv_ref(x, w, b)
+    B, K = x.shape
+    N = w.shape[1]
+    if K % LANE or N % LANE:
+        return gemv_ref(x, w, b)                   # unaligned: oracle path
+    bk, bn = plan_blocks(B, K, N, dtype_bytes=w.dtype.itemsize)
+    return gemv_pallas(x, w, b, block_k=bk, block_n=bn,
+                       interpret=interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the streamlined decode GEMV."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemv_ref(x: jax.Array, w: jax.Array,
+             b: jax.Array | None = None) -> jax.Array:
+    """x: (B, K) activation vectors; w: (K, N) streamed weights.
+
+    f32 accumulation, output in x.dtype — matches the kernel contract.
+    """
+    y = jnp.einsum("bk,kn->bn", x.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype)

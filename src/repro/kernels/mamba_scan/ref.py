@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the selective (S6) scan."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def mamba_scan_ref(da: jax.Array, bx: jax.Array, c: jax.Array,
+                   h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """h_t = da_t * h_{t-1} + bx_t ; y_t[c] = sum_n C_t[n] * h_t[c,n].
+
+    da, bx: (B,S,C,N) f32; c: (B,S,N) f32; h0: (B,C,N) f32.
+    Returns (y (B,S,C), h_final (B,C,N)).
+    """
+    def step(h, inp):
+        a_t, b_t, c_t = inp
+        h = a_t * h + b_t
+        y = jnp.einsum("bcn,bn->bc", h, c_t)
+        return h, y
+
+    xs = (da.transpose(1, 0, 2, 3), bx.transpose(1, 0, 2, 3),
+          c.transpose(1, 0, 2))
+    h_fin, ys = lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h_fin

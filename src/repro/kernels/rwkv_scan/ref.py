@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the RWKV6 WKV recurrence."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rwkv_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                  u: jax.Array, s0: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S + k v^T.
+
+    r,k,v,w: (B,S,H,dh) f32; u: (H,dh); s0: (B,H,dh,dh).
+    Returns (y (B,S,H,dh), s_final).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[..., None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    s_fin, ys = lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s_fin

@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --------------------------------------------------------------------------
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+# ShapeDtypeStruct stand-ins (no allocation), print memory/cost analysis,
+# and dump the roofline artifacts consumed by benchmarks/roofline.py.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+# --------------------------------------------------------------------------
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.compiler.mapper import plan_model, summarize
+from repro.configs import SHAPES, assigned_cells, get_config, get_shape
+from repro.core import hlo as hlo_mod
+from repro.core import hlo_cost
+from repro.core.dist import make_axis_env
+from repro.core.steps import (batch_specs, build_prefill_step,
+                              build_serve_step, build_train_step)
+from repro.launch import mesh as mesh_mod
+from repro.models.registry import build_model
+from repro.optim import AdamW, get_schedule
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _sds(tree, mesh, specs):
+    """ShapeDtypeStructs carrying NamedShardings (no device allocation)."""
+    return jax.tree.map(
+        lambda t, s: jax.ShapeDtypeStruct(
+            t.shape, t.dtype, sharding=NamedSharding(mesh, s)),
+        tree, specs)
+
+
+def make_inputs(cfg, shape, plan, env):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    toks = jnp.int32
+    out = {}
+    if shape.kind == "train":
+        text = s
+        if cfg.family == "vlm":
+            text = s - cfg.vlm.n_patches
+        out["tokens"] = jax.ShapeDtypeStruct((b, text), toks)
+        out["labels"] = jax.ShapeDtypeStruct((b, text), toks)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encdec.enc_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vlm.n_patches, cfg.vlm.patch_embed_dim), jnp.bfloat16)
+    elif shape.kind == "prefill":
+        text = s - (cfg.vlm.n_patches if cfg.family == "vlm" else 0)
+        out["tokens"] = jax.ShapeDtypeStruct((b, text), toks)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encdec.enc_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vlm.n_patches, cfg.vlm.patch_embed_dim), jnp.bfloat16)
+    else:  # decode
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), toks)
+        out["positions"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return out
+
+
+def plan_for_cell(cfg, shape, mesh_axes, mesh_shape, *, esl_overlap=True,
+                  remat="block", seq_shard_kv=False):
+    mode = "train" if shape.kind == "train" else "serve"
+    kv_seq_axis = None
+    if (shape.name == "long_500k" and cfg.family in ("hybrid",)
+            and shape.kind == "decode"):
+        kv_seq_axis = "data"          # sequence-parallel KV (flash-decode)
+    # decode cells lower in f32 end-to-end: the CPU dry-run backend has
+    # no native bf16 dot and otherwise inserts whole-stack convert/copy
+    # churn that exists on no TPU; report TPU-native (bf16) as half the
+    # measured stream (EXPERIMENTS.md §Roofline).
+    dtypes = {}
+    if shape.kind == "decode":
+        dtypes = dict(compute_dtype="float32", param_dtype="float32")
+    return plan_model(cfg, mesh_axes, mesh_shape, mode,
+                      esl_overlap=esl_overlap, remat=remat,
+                      seq_shard_kv=seq_shard_kv, kv_seq_axis=kv_seq_axis,
+                      **dtypes)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               esl_overlap: bool = True, remat: str = "block",
+               mesh=None, save: bool = True, tag: str = "",
+               tp: int = 16, accum: int = 1):
+    """Lower + compile one cell; return the artifact row."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not cfg.supports_shape(shape_name):
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "full-attention arch skips long_500k (DESIGN.md)"}
+    mesh_axes, mesh_shape = mesh_mod.mesh_axes_shape(multi_pod, tp)
+    if mesh is None:
+        mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod, tp=tp)
+    plan = plan_for_cell(cfg, shape, mesh_axes, mesh_shape,
+                         esl_overlap=esl_overlap, remat=remat)
+    model = build_model(cfg, plan)
+    env = make_axis_env(plan, batch=shape.global_batch)
+    inputs = make_inputs(cfg, shape, plan, env)
+    bspecs = batch_specs(model, env, shape.kind)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt = AdamW(lr=get_schedule("cosine", 3e-4, 100, 10_000))
+        step, meta = build_train_step(model, opt, mesh, shape.global_batch,
+                                      accum_steps=accum)
+        specs = meta["param_specs"]
+        params, _ = model.abstract_params()
+        opt_sds = opt.init_abstract(params)
+        p_sds = _sds(params, mesh, specs)
+        o_specs = type(opt_sds)(P(), jax.tree.map(lambda s: s, specs),
+                                jax.tree.map(lambda s: s, specs))
+        o_sds = _sds(opt_sds, mesh, o_specs)
+        b_sds = {k: jax.ShapeDtypeStruct(
+            v.shape, v.dtype, sharding=NamedSharding(mesh, bspecs[k]))
+            for k, v in inputs.items()}
+        lowered = jax.jit(step).lower(p_sds, o_sds, b_sds)
+    elif shape.kind == "prefill":
+        stepf, meta = build_prefill_step(model, mesh, shape.global_batch,
+                                         shape.seq_len)
+        specs, cspecs = meta["param_specs"], meta["cache_specs"]
+        params, _ = model.abstract_params()
+        cache = model.init_cache(shape.global_batch, shape.seq_len,
+                                 abstract=True)
+        p_sds = _sds(params, mesh, specs)
+        c_sds = _sds(cache, mesh, cspecs)
+        t_sds = jax.ShapeDtypeStruct(
+            inputs["tokens"].shape, jnp.int32,
+            sharding=NamedSharding(mesh, bspecs["tokens"]))
+        extra = []
+        for k in ("frames", "patch_embeds"):
+            if k in inputs:
+                extra.append(jax.ShapeDtypeStruct(
+                    inputs[k].shape, inputs[k].dtype,
+                    sharding=NamedSharding(mesh, bspecs[k])))
+            else:
+                extra.append(jax.ShapeDtypeStruct((), jnp.bfloat16))
+        lowered = jax.jit(stepf).lower(p_sds, c_sds, t_sds, *extra)
+    else:  # decode
+        stepf, meta = build_serve_step(model, mesh, shape.global_batch,
+                                       shape.seq_len)
+        specs, cspecs = meta["param_specs"], meta["cache_specs"]
+        params, _ = model.abstract_params()
+        cache = model.init_cache(shape.global_batch, shape.seq_len,
+                                 abstract=True)
+        p_sds = _sds(params, mesh, specs)
+        c_sds = _sds(cache, mesh, cspecs)
+        t_sds = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1), jnp.int32,
+            sharding=NamedSharding(mesh, bspecs["tokens"]))
+        pos_sds = jax.ShapeDtypeStruct(
+            (shape.global_batch,), jnp.int32,
+            sharding=NamedSharding(mesh, bspecs["positions"]))
+        lowered = jax.jit(stepf, donate_argnums=(1,)).lower(
+            p_sds, c_sds, t_sds, pos_sds)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    txt = compiled.as_text()
+    n_dev = 1
+    for s_ in mesh_shape:
+        n_dev *= s_
+    # trip-count-aware costs (XLA's cost_analysis counts scan bodies once)
+    cost = hlo_cost.module_cost(txt, default_group=plan.tp)
+    coll = hlo_mod.collective_stats(txt, default_group=plan.tp)
+    row = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": "x".join(map(str, mesh_shape)), "multi_pod": multi_pod,
+        "esl_overlap": esl_overlap, "remat": remat, "tag": tag,
+        "status": "ok",
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "flops_per_device": cost.flops,
+        "bytes_per_device": cost.hbm_bytes,
+        "wire_bytes_per_device": cost.wire_bytes,
+        "coll_counts": cost.coll_counts,
+        "xla_flops_once": ca.get("flops", 0.0),
+        "xla_bytes_once": ca.get("bytes accessed", 0.0),
+        "collectives_once": coll.row(),
+        "memory": {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+            "peak_bytes": (getattr(ma, "argument_size_in_bytes", 0)
+                           + getattr(ma, "temp_size_in_bytes", 0)),
+        },
+        "plan": summarize(plan),
+        "op_census": hlo_mod.op_census(txt),
+    }
+    print(f"[dryrun] {arch} x {shape_name} mesh={row['mesh']} "
+          f"overlap={esl_overlap} : lower {t_lower:.1f}s compile "
+          f"{t_compile:.1f}s flops/dev={row['flops_per_device']:.3e} "
+          f"bytes/dev={row['bytes_per_device']:.3e} "
+          f"wire={cost.wire_bytes:.3e} "
+          f"temp={row['memory']['temp_bytes']/2**30:.2f}GiB")
+    if save:
+        ART_DIR.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}__{shape_name}__{row['mesh']}" + \
+            ("" if esl_overlap else "__noesl") + \
+            (f"__{tag}" if tag else "")
+        (ART_DIR / f"{name}.json").write_text(json.dumps(row, indent=1))
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--no-esl", action="store_true",
+                    help="blocking-collective baseline (paper's GPU-style)")
+    ap.add_argument("--remat", type=str, default="block")
+    ap.add_argument("--tp", type=int, default=16)
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatches (train cells)")
+    ap.add_argument("--tag", type=str, default="")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.all:
+        meshes = [False, True] if not args.single_pod_only else [False]
+    else:
+        meshes = [args.multi_pod]
+
+    results = []
+    if args.all:
+        run, skip = assigned_cells()
+        for mp in meshes:
+            mesh = mesh_mod.make_production_mesh(multi_pod=mp)
+            for arch, shp in run:
+                try:
+                    results.append(lower_cell(
+                        arch, shp, mp, esl_overlap=not args.no_esl,
+                        remat=args.remat, mesh=mesh, tag=args.tag))
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shp,
+                                    "mesh": mp, "status": "FAILED",
+                                    "error": str(e)[:400]})
+        for arch, shp in skip:
+            results.append({"arch": arch, "shape": shp, "status": "skipped",
+                            "reason": "sub-quadratic shape on full-attention arch"})
+    else:
+        results.append(lower_cell(args.arch, args.shape, args.multi_pod,
+                                  esl_overlap=not args.no_esl,
+                                  remat=args.remat, tag=args.tag,
+                                  tp=args.tp, accum=args.accum))
+    bad = [r for r in results if r.get("status") == "FAILED"]
+    print(f"\n[dryrun] {len(results)} cells, {len(bad)} failed")
+    if bad:
+        for r in bad:
+            print("  FAILED:", r["arch"], r["shape"], r.get("error", "")[:160])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state.  Single-pod: (data=16, model=16) = 256 chips;
+multi-pod: (pod=2, data=16, model=16) = 512 chips.  The ``model`` axis is
+innermost = the ICI ring the ESL schedule runs on; the ``pod`` axis is the
+cross-DCI data-parallel (and gradient-compression) domain.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline / latency model
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~ring direction)
+DCI_BW = 6.25e9                 # cross-pod per chip (assumed, data-center)
+CHIP_POWER_W = 200.0            # board TDP-ish for the energy model
+
+
+def make_production_mesh(*, multi_pod: bool = False, tp: int = 16):
+    """tp<16: the mapper refactors the same chips as (.., dpx, model) —
+    a logical re-slicing of the physical torus (no rewiring), trading
+    ring width for extra data parallelism (§Perf: collective-bound
+    training cells want a narrower ESL ring)."""
+    axes, shape = mesh_axes_shape(multi_pod, tp)
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for multi-process-free CPU tests."""
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axes_shape(multi_pod: bool, tp: int = 16):
+    assert 16 % tp == 0
+    if tp == 16:
+        if multi_pod:
+            return ("pod", "data", "model"), (2, 16, 16)
+        return ("data", "model"), (16, 16)
+    dpx = 16 // tp
+    if multi_pod:
+        return ("pod", "data", "dpx", "model"), (2, 16, dpx, tp)
+    return ("data", "dpx", "model"), (16, dpx, tp)

@@ -1,0 +1,247 @@
+"""Model substrate: parameter init context, norms, rope, basic ops.
+
+Parameters are plain nested dicts of ``jnp`` arrays.  Init runs through an
+:class:`InitCtx` which (a) can run *abstract* (ShapeDtypeStruct only -- used
+by the dry-run so a 400B model never allocates) and (b) records the
+*logical axes* of every parameter by tree path.  The HyperDex-analog mapper
+turns logical axes into mesh ``PartitionSpec``s.
+
+Logical axis vocabulary (the mapper's rule table keys):
+  'embed'      d_model-sized dims
+  'q_heads'    stored (padded/duplicated) query-head dim        -> model
+  'kv_heads'   stored KV-head dim                               -> model
+  'head_dim'   per-head dim                                     -> none
+  'ffn'        padded FFN hidden dim                            -> model
+  'vocab'      padded vocabulary dim                            -> model
+  'experts'    expert dim                                       -> model (EP)
+  'expert_ffn' per-expert FFN dim (possibly split)              -> model part
+  'layers'     stacked-layer leading dim                        -> none
+  'conv'/'state'/'lora'/'pos'/None  misc small dims             -> none
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Params = Dict[str, Any]
+
+
+class InitCtx:
+    """Parameter factory recording logical axes by path.
+
+    ``abstract=True`` produces ``jax.ShapeDtypeStruct`` leaves (dry-run).
+    """
+
+    def __init__(self, key: jax.Array, *, abstract: bool = False,
+                 param_dtype=jnp.float32):
+        self._key = key
+        self.abstract = abstract
+        self.param_dtype = param_dtype
+        self.axes: Dict[str, Tuple[Optional[str], ...]] = {}
+        self._stack: list = []
+
+    # -- scoping ------------------------------------------------------------
+
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        self._stack.append(str(name))
+        try:
+            yield self
+        finally:
+            self._stack.pop()
+
+    def _path(self, name: str) -> str:
+        return "/".join(self._stack + [name])
+
+    def fold(self, name: str) -> jax.Array:
+        """Deterministic per-path key (abstract mode never consumes RNG)."""
+        h = np.uint32(abs(hash(self._path(name))) % (2 ** 31))
+        return jax.random.fold_in(self._key, h)
+
+    # -- creation -----------------------------------------------------------
+
+    def param(self, name: str, shape: Sequence[int],
+              axes: Sequence[Optional[str]], init: str = "normal",
+              scale: float = 1.0, dtype=None) -> jax.Array:
+        shape = tuple(int(s) for s in shape)
+        if len(shape) != len(tuple(axes)):
+            raise ValueError(
+                f"{self._path(name)}: shape {shape} vs axes {tuple(axes)}")
+        dtype = dtype or self.param_dtype
+        self.axes[self._path(name)] = tuple(axes)
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        k = self.fold(name)
+        if init == "normal":
+            fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+            std = scale / math.sqrt(max(fan_in, 1))
+            return (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "uniform":
+            return (jax.random.uniform(k, shape, jnp.float32, -scale, scale)
+                    ).astype(dtype)
+        raise ValueError(f"unknown init {init!r}")
+
+    def param_from(self, name: str, shape: Sequence[int],
+                   axes: Sequence[Optional[str]], builder,
+                   dtype=None) -> jax.Array:
+        """Parameter with custom construction (padded/duplicated layouts).
+
+        ``builder(key) -> f32 array of `shape```; skipped in abstract mode.
+        """
+        shape = tuple(int(s) for s in shape)
+        dtype = dtype or self.param_dtype
+        self.axes[self._path(name)] = tuple(axes)
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        out = builder(self.fold(name))
+        assert tuple(out.shape) == shape, (self._path(name), out.shape, shape)
+        return out.astype(dtype)
+
+    def dense(self, name: str, d_in: int, d_out: int,
+              axes: Tuple[Optional[str], Optional[str]],
+              bias: bool = False, scale: float = 1.0,
+              bias_axis: Optional[str] = None) -> Params:
+        with self.scope(name):
+            p: Params = {"w": self.param("w", (d_in, d_out), axes, scale=scale)}
+            if bias:
+                p["b"] = self.param(
+                    "b", (d_out,), (bias_axis if bias_axis else axes[1],),
+                    init="zeros")
+        return p
+
+
+def stacked_init(ctx: InitCtx, name: str, n: int, init_one):
+    """Stack `n` layers' params on a leading 'layers' axis.
+
+    ``init_one(ctx) -> Params`` is evaluated once to learn the structure,
+    then materialized per-layer and stacked (real mode) or given a stacked
+    leading dim (abstract mode).  Axes gain a leading 'layers'.
+    """
+    with ctx.scope(name):
+        if ctx.abstract:
+            inner = InitCtx(ctx._key, abstract=True, param_dtype=ctx.param_dtype)
+            inner._stack = list(ctx._stack)
+            one = init_one(inner)
+            for path, ax in inner.axes.items():
+                ctx.axes[path] = ("layers",) + ax
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), one)
+        # real mode: vmap the initializer over per-layer keys
+        leaves_list = []
+        axes_snapshot = None
+        for i in range(n):
+            inner = InitCtx(jax.random.fold_in(ctx.fold(name), i),
+                            abstract=False, param_dtype=ctx.param_dtype)
+            inner._stack = list(ctx._stack)
+            one = init_one(inner)
+            leaves_list.append(one)
+            axes_snapshot = inner.axes
+        for path, ax in axes_snapshot.items():
+            ctx.axes[path] = ("layers",) + ax
+        return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *leaves_list)
+
+
+# --------------------------------------------------------------------------
+# Normalization / activations / rope
+# --------------------------------------------------------------------------
+
+def init_norm(ctx: InitCtx, name: str, dim: int, kind: str) -> Params:
+    # 'vec': stored model-sharded; elementwise use is rank-local in the
+    # scattered-activation (ESL) convention
+    with ctx.scope(name):
+        p = {"scale": ctx.param("scale", (dim,), ("vec",), init="ones")}
+        if kind == "layernorm":
+            p["bias"] = ctx.param("bias", (dim,), ("vec",), init="zeros")
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str, eps: float = 1e-5,
+               stats_axis_name: Optional[str] = None) -> jax.Array:
+    """RMSNorm / LayerNorm in f32.
+
+    ``stats_axis_name``: when the hidden dim is *scattered* across a mesh
+    axis (ESL scattered-activation mode), moments are combined with a scalar
+    ``psum`` -- the distributed-norm trick that keeps activations scattered.
+    """
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mean = jnp.mean(x, -1, keepdims=True)
+        if stats_axis_name:
+            mean = jax.lax.pmean(mean, stats_axis_name)
+        x = x - mean
+    var = jnp.mean(jnp.square(x), -1, keepdims=True)
+    if stats_axis_name:
+        var = jax.lax.pmean(var, stats_axis_name)
+    y = x * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def activate(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh), positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mesh helpers
+# --------------------------------------------------------------------------
+
+def run_sharded(fn, mesh, in_specs, out_specs, *args,
+                check_vma: bool = False):
+    """shard_map when a mesh is given, plain call otherwise (smoke tests)."""
+    if mesh is None:
+        return fn(*args)
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=check_vma)(*args)
+
+
+def axis_index_or_zero(name: Optional[str]) -> jax.Array:
+    if name is None:
+        return jnp.int32(0)
+    return jax.lax.axis_index(name)
+
+
+def psum_if(x, axis_name: Optional[str]):
+    return jax.lax.psum(x, axis_name) if axis_name else x
+
+
+def big_neg(dtype) -> jax.Array:
+    return jnp.asarray(jnp.finfo(jnp.float32).min / 2, jnp.float32)

@@ -1,0 +1,194 @@
+"""Mamba (S6) block for the jamba hybrid stack.
+
+Sharding: d_inner is column-tiled over the model ring (the mapper's
+column-wise rule — conv and SSM are per-channel, so they stay rank-local);
+in_proj is a streamed ``ag_matmul``, out_proj streams partial products
+back (``rs_matmul``).  The small dt/B/C projection is row-parallel with a
+(cheap) psum.  The selective scan is a chunked associative scan in the ref
+path; ``kernels/mamba_scan`` is the Pallas twin.
+
+Decode carries (conv_state, ssm_state) — constant memory per token, the
+regime where the LPU's "stream parameters, tiny activations" argument is
+strongest.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import esl
+from repro.core.dist import AxisEnv
+from repro.models.common import InitCtx
+
+Params = Dict[str, Any]
+
+
+def mamba_dims(cfg, plan) -> Tuple[int, int]:
+    """(d_inner_padded, d_inner_shard)."""
+    m = cfg.mamba
+    d_in = m.expand * cfg.d_model
+    pad = ((d_in + plan.tp - 1) // plan.tp) * plan.tp
+    return pad, pad // plan.tp
+
+
+def init_mamba(ctx: InitCtx, cfg, plan, name: str = "mamba") -> Params:
+    m = cfg.mamba
+    D = cfg.d_model
+    d_in, _ = mamba_dims(cfg, plan)
+    s = 1.0 / math.sqrt(D)
+    with ctx.scope(name):
+        p: Params = {
+            # separate x/z projections: a fused (D, 2*d_in) tile would split
+            # the concatenated halves across ranks instead of per-half
+            "in_x": ctx.param("in_x", (D, d_in),
+                              ("embed", "mamba_inner"), scale=1.0),
+            "in_z": ctx.param("in_z", (D, d_in),
+                              ("embed", "mamba_inner"), scale=1.0),
+            "conv_w": ctx.param("conv_w", (m.d_conv, d_in),
+                                ("conv", "mamba_inner"), scale=1.0),
+            "conv_b": ctx.param("conv_b", (d_in,), ("mamba_inner",),
+                                init="zeros"),
+            "x_proj": ctx.param("x_proj", (d_in, m.dt_rank + 2 * m.d_state),
+                                ("mamba_inner", None), scale=1.0),
+            "dt_proj": ctx.param("dt_proj", (m.dt_rank, d_in),
+                                 ("dt", "mamba_inner"), scale=1.0),
+            "dt_bias": ctx.param("dt_bias", (d_in,), ("mamba_inner",),
+                                 init="zeros"),
+            "a_log": ctx.param_from(
+                "a_log", (d_in, m.d_state), ("mamba_inner", "state"),
+                lambda k: jnp.log(jnp.broadcast_to(
+                    jnp.arange(1, m.d_state + 1, dtype=jnp.float32),
+                    (d_in, m.d_state)))),
+            "d_skip": ctx.param("d_skip", (d_in,), ("mamba_inner",),
+                                init="ones"),
+            "out_proj": ctx.param("out_proj", (d_in, D),
+                                  ("mamba_inner", "embed"),
+                                  scale=1.0 / math.sqrt(d_in) * math.sqrt(d_in) ** 0),
+        }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over seq.  x: (B,S,C); w: (K,C).
+
+    Returns (y, new_state) with state = last K-1 inputs (for decode).
+    """
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, xp.shape[1] - (K - 1):, :]
+    return y + b, new_state
+
+
+def _ssm_scan(a: jax.Array, bx: jax.Array, c: jax.Array,
+              h0: jax.Array, chunk: int = 128
+              ) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + bx_t;  y_t = sum_n c_tn * h_tn.
+
+    a, bx: (B,S,C,N); c: (B,S,N).  Chunked associative scan.
+    Returns (y (B,S,C), h_final (B,C,N)).
+    """
+    B, S, C, N = a.shape
+    chunk = min(chunk, S)
+    n_chunks = (S + chunk - 1) // chunk
+    pad = n_chunks * chunk - S
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    ac = a.reshape(B, n_chunks, chunk, C, N).transpose(1, 0, 2, 3, 4)
+    bc = bx.reshape(B, n_chunks, chunk, C, N).transpose(1, 0, 2, 3, 4)
+    cc = c.reshape(B, n_chunks, chunk, N).transpose(1, 0, 2, 3)
+
+    def chunk_body(h, inp):
+        ak, bk, ck = inp
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        aa, bb = lax.associative_scan(combine, (ak, bk), axis=1)
+        h_all = aa * h[:, None] + bb                   # (B,chunk,C,N)
+        y = jnp.einsum("bscn,bsn->bsc", h_all, ck)
+        return h_all[:, -1], y
+
+    h_fin, ys = lax.scan(chunk_body, h0, (ac, bc, cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n_chunks * chunk, C)
+    return y[:, :S], h_fin
+
+
+def mamba_fwd(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
+              state: Optional[Dict[str, jax.Array]] = None,
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B,S,D/tp) scattered or (B,S,D).  state: decode carry or None.
+
+    Returns (y in x's convention, new_state).
+    """
+    m = cfg.mamba
+    overlap = plan.esl_overlap
+    B, S = x.shape[0], x.shape[1]
+
+    w_in = jnp.concatenate([p["in_x"], p["in_z"]], axis=-1)  # local halves
+    xz = esl.ag_matmul(x, w_in, axis=env.model, tp=env.tp,
+                       overlap=overlap)
+    xs, z = jnp.split(xz, 2, axis=-1)                  # (B,S,din_loc)
+
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _causal_conv(
+        xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    # dt/B/C: row-parallel small projection (psum over the ring)
+    dbc = jnp.einsum("bsc,cr->bsr", xs, p["x_proj"])
+    if env.model is not None:
+        dbc = lax.psum(dbc, env.model)
+    dt, bmat, cmat = jnp.split(
+        dbc, [m.dt_rank, m.dt_rank + m.d_state], axis=-1)
+    dt = jnp.einsum("bsr,rc->bsc", dt, p["dt_proj"]) + p["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))       # (B,S,din_loc)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))       # (din_loc,N)
+    da = jnp.exp(dt[..., None] * a)                    # (B,S,C,N)
+    bx = (dt * xs.astype(jnp.float32))[..., None] * \
+        bmat.astype(jnp.float32)[:, :, None, :]        # (B,S,C,N)
+
+    if S == 1 and state is not None:
+        # generation stage: one recurrence step, constant memory
+        h0 = state["ssm"]
+        h = da[:, 0] * h0 + bx[:, 0]
+        y = jnp.einsum("bcn,bn->bc", h, cmat[:, 0].astype(jnp.float32))[:, None]
+        new_state = {"conv": new_conv, "ssm": h}
+    else:
+        h0 = (state["ssm"] if state is not None
+              else jnp.zeros((B, xs.shape[-1], m.d_state), jnp.float32))
+        y, h_fin = _ssm_scan(da, bx, cmat.astype(jnp.float32), h0)
+        new_state = {"conv": new_conv, "ssm": h_fin}
+
+    y = y.astype(xs.dtype) + xs * p["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = esl.rs_matmul(y, p["out_proj"], axis=env.model, tp=env.tp,
+                        overlap=overlap, scatter_out=overlap)
+    return out, new_state
+
+
+def init_mamba_state(cfg, plan, batch: int, abstract: bool = False,
+                     dtype=jnp.bfloat16):
+    m = cfg.mamba
+    d_in, _ = mamba_dims(cfg, plan)
+    conv = (batch, m.d_conv - 1, d_in)
+    ssm = (batch, d_in, m.d_state)
+    if abstract:
+        return {"conv": jax.ShapeDtypeStruct(conv, dtype),
+                "ssm": jax.ShapeDtypeStruct(ssm, jnp.float32)}
+    return {"conv": jnp.zeros(conv, dtype),
+            "ssm": jnp.zeros(ssm, jnp.float32)}

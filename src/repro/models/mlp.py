@@ -1,0 +1,62 @@
+"""Feed-forward layers: column-parallel FC1 / row-parallel FC2 via ESL.
+
+The mapper gives the FFN *column-wise tiles* (paper: "divides the
+feed-forward network weights with column-wise tiles").  Gated (SwiGLU)
+variants fuse gate+up into one streamed ``ag_matmul``; FC2 streams its
+partial products around the ring (``rs_matmul``) — the paper's "tail of
+FC1's sync hides under FC2" case.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import esl
+from repro.core.dist import AxisEnv
+from repro.models.common import InitCtx, activate
+
+Params = Dict[str, Any]
+
+
+def init_mlp(ctx: InitCtx, cfg, plan, name: str = "mlp",
+             d_ff_shard: int = None, bias: bool = False) -> Params:
+    D = cfg.d_model
+    ff = (plan.d_ff_shard if d_ff_shard is None else d_ff_shard) * plan.tp
+    s1 = 1.0 / math.sqrt(D)
+    s2 = 1.0 / math.sqrt(ff)
+    with ctx.scope(name):
+        p: Params = {}
+        if cfg.mlp_gated:
+            p["wg"] = ctx.param("wg", (D, ff), ("embed", "ffn"), scale=1.0)
+            p["wu"] = ctx.param("wu", (D, ff), ("embed", "ffn"), scale=1.0)
+        else:
+            p["wi"] = ctx.param("wi", (D, ff), ("embed", "ffn"), scale=1.0)
+            if bias:
+                p["bi"] = ctx.param("bi", (ff,), ("ffn",), init="zeros")
+        p["wd"] = ctx.param("wd", (ff, D), ("ffn", "embed"), scale=1.0)
+        if bias:
+            p["bd"] = ctx.param("bd", (D,), ("vec",), init="zeros")
+    return p
+
+
+def mlp_fwd(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv) -> jax.Array:
+    """x: (B,S,D/tp) scattered (ESL) or (B,S,D) full (baseline)."""
+    overlap = plan.esl_overlap
+    if "wg" in p:
+        w1 = jnp.concatenate([p["wg"], p["wu"]], axis=-1)
+        h = esl.ag_matmul(x, w1, axis=env.model, tp=env.tp, overlap=overlap)
+        g, u = jnp.split(h, 2, axis=-1)
+        h = activate(g, cfg.activation) * u
+    else:
+        h = esl.ag_matmul(x, p["wi"], axis=env.model, tp=env.tp,
+                          overlap=overlap, b=p.get("bi"))
+        h = activate(h, cfg.activation)
+    y = esl.rs_matmul(h, p["wd"], axis=env.model, tp=env.tp,
+                      overlap=overlap, scatter_out=overlap)
+    if "bd" in p:
+        y = y + esl.full_vec(p["bd"], axis=env.model, tp=env.tp,
+                             scattered_activations=overlap)
+    return y

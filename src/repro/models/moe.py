@@ -1,0 +1,327 @@
+"""Mixture-of-Experts with hierarchical expert parallelism.
+
+Expert placement (mapper-decided, rank-major storage):
+
+* expert weights are stored rank-major on dim 0 over ``expert_axes``
+  (width W): rank with linear EP index ``l`` owns expert *group*
+  ``g = l // split`` (``Ecell = E_pad / n_groups`` experts) and FFN
+  column-half ``h = l % split``.
+* ``expert_axes == ('model',)``: tokens are replicated across the model
+  ring (they arrive via the ESL all-gather anyway), so dispatch is a
+  purely local top-C selection; expert partial outputs (and FFN halves)
+  combine in ONE ``psum`` over the ring — which doubles as the layer's
+  row-parallel sync.  No all-to-all needed.
+* ``expert_axes == ('data','model')`` (giant-MoE serving, llama4-400B):
+  tokens are data-sharded, so each model column all-to-alls its token
+  buckets across the data axis to the experts' owner rows; each
+  (data,model) rank computes its (group, half) cell; a reverse
+  all-to-all returns partials which combine via the same ring psum.
+
+Capacity-based (top-C per bucket) dispatch with static shapes; overflow
+drops follow the standard Switch discipline and are counted in ``stats``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import esl
+from repro.core.dist import AxisEnv
+from repro.models.common import InitCtx, activate
+
+Params = Dict[str, Any]
+
+
+def _ceil_to(x, m):
+    return (x + m - 1) // m * m
+
+
+def moe_layout(plan):
+    """(W, split, n_groups, Ecell, E_pad, ffh) for the plan's MoE."""
+    m = plan.moe
+    sizes = dict(zip(plan.mesh_axes or (), plan.mesh_shape))
+    w = 1
+    for a in m.expert_axes:
+        w *= sizes.get(a, 1)
+    w = max(w, 1)
+    split = m.ffn_split
+    n_groups = max(w // max(split, 1), 1)
+    e_pad = _ceil_to(m.n_experts, n_groups)
+    ecell = e_pad // n_groups
+    ffh = m.d_ff_expert_shard
+    return w, split, n_groups, ecell, e_pad, ffh
+
+
+def init_moe(ctx: InitCtx, cfg, plan, name: str = "moe") -> Params:
+    D = cfg.d_model
+    m = plan.moe
+    w, split, n_groups, ecell, e_pad, ffh = moe_layout(plan)
+    dffe = ffh * max(split, 1)
+    s1 = 1.0 / math.sqrt(D)
+    s2 = 1.0 / math.sqrt(max(dffe, 1))
+
+    def expert_builder(n_in, n_out, transpose_half, scale):
+        # logical (E, n_in, n_out) -> rank-major (W, Ecell, n_in, n_out_half)
+        def build(key):
+            wlog = jax.random.normal(key, (e_pad, n_in, n_out),
+                                     jnp.float32) * scale
+            # zero padded experts
+            if e_pad > m.n_experts:
+                mask = (jnp.arange(e_pad) < m.n_experts)[:, None, None]
+                wlog = wlog * mask
+            parts = []
+            for l in range(w):
+                g, h = divmod(l, split)
+                blk = wlog[g * ecell:(g + 1) * ecell]
+                if transpose_half:   # FC2: rows (ffn) are split
+                    blk = blk[:, h * (n_in // split):(h + 1) * (n_in // split), :]
+                else:                # FC1: columns (ffn) are split
+                    blk = blk[:, :, h * (n_out // split):(h + 1) * (n_out // split)]
+                parts.append(blk)
+            return jnp.stack(parts, 0)
+        return build
+
+    with ctx.scope(name):
+        p: Params = {
+            "router": ctx.param("router", (D, e_pad), ("embed", None),
+                                scale=1.0),
+            "wg": ctx.param_from(
+                "wg", (w, ecell, D, ffh), ("experts", None, "embed", None),
+                expert_builder(D, dffe, False, s1)),
+            "wu": ctx.param_from(
+                "wu", (w, ecell, D, ffh), ("experts", None, "embed", None),
+                expert_builder(D, dffe, False, s1)),
+            "wd": ctx.param_from(
+                "wd", (w, ecell, ffh, D), ("experts", None, None, "embed"),
+                expert_builder(dffe, D, True, s2)),
+        }
+        if cfg.moe.n_shared_experts:
+            dsh = cfg.moe.n_shared_experts * plan.d_ff_shard * plan.tp
+            with ctx.scope("shared"):
+                p["shared"] = {
+                    "wg": ctx.param("wg", (D, dsh), ("embed", "ffn"),
+                                    scale=1.0),
+                    "wu": ctx.param("wu", (D, dsh), ("embed", "ffn"),
+                                    scale=1.0),
+                    "wd": ctx.param("wd", (dsh, D), ("ffn", "embed"),
+                                    scale=1.0),
+                }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def _route(p, xf, cfg, plan):
+    """xf: (T, D) full tokens.  Returns top-k (ids, gates, probs)."""
+    m = cfg.moe
+    _, _, _, _, e_pad, _ = moe_layout(plan)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    if e_pad > m.n_experts:
+        logits = jnp.where(jnp.arange(e_pad) < m.n_experts, logits,
+                           jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return ids, gates, probs
+
+
+def _lb_loss(probs, ids, n_experts):
+    """Switch-style load-balancing auxiliary loss."""
+    e = probs.shape[-1]
+    hot = jax.nn.one_hot(ids, e, dtype=jnp.float32)        # (T,k,E)
+    frac_tokens = jnp.mean(jnp.sum(hot, 1), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def _expert_ffn(wg, wu, wd, xt, activation):
+    """xt: (..., C, D); expert mats (D, ffh)/(ffh, D)."""
+    g = jnp.einsum("...cd,df->...cf", xt, wg)
+    u = jnp.einsum("...cd,df->...cf", xt, wu)
+    h = activate(g, activation) * u
+    return jnp.einsum("...cf,fd->...cd", h, wd)
+
+
+def _select_topc(score, cap):
+    """Indices of up to `cap` rows with score>0 (stable-ish)."""
+    vals, idx = lax.top_k(score, cap)
+    return idx, (vals > 0)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def moe_fwd(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,D/tp) scattered or (B,S,D) full.  Returns (y, aux_loss).
+
+    y matches x's sharding convention (scattered when ESL overlap is on).
+    """
+    overlap = plan.esl_overlap
+    B, S = x.shape[0], x.shape[1]
+    xf = (esl.gather_scattered(x, axis=env.model, tp=env.tp)
+          if overlap else x)
+    T, D = B * S, xf.shape[-1]
+    xt = xf.reshape(T, D)
+
+    ids, gates, probs = _route(p, xt, cfg, plan)
+    aux = _lb_loss(probs, ids, cfg.moe.n_experts)
+
+    w, split, n_groups, ecell, e_pad, ffh = moe_layout(plan)
+    use_a2a = len(plan.moe.expert_axes) > 1 and env.model is not None
+
+    if env.model is None:
+        out = _moe_local_all(p, xt, ids, gates, cfg, plan)
+    elif not use_a2a:
+        out = _moe_model_parallel(p, xt, ids, gates, cfg, plan, env)
+    else:
+        out = _moe_data_model(p, xt, ids, gates, cfg, plan, env)
+
+    # combine expert partials (and FFN halves) over the ring; this psum is
+    # the layer's row-parallel sync — in ESL mode it reduce-scatters
+    # directly into the scattered activation domain.
+    if env.model is not None:
+        if overlap:
+            out = lax.psum_scatter(out, env.model,
+                                   scatter_dimension=out.ndim - 1, tiled=True)
+        else:
+            out = lax.psum(out, env.model)
+
+    if "shared" in p:
+        sh = p["shared"]
+        xin = x
+        g = esl.ag_matmul(xin, jnp.concatenate([sh["wg"], sh["wu"]], -1),
+                          axis=env.model, tp=env.tp, overlap=overlap)
+        gg, uu = jnp.split(g, 2, -1)
+        hh = activate(gg, cfg.activation) * uu
+        out_sh = esl.rs_matmul(hh, sh["wd"], axis=env.model, tp=env.tp,
+                               overlap=overlap, scatter_out=overlap)
+        out = out + out_sh.reshape(out.shape[0], -1) \
+            if out.ndim == 2 else out + out_sh
+    return out.reshape(x.shape), aux
+
+
+def _capacity(T, k, buckets, cf):
+    c = int(math.ceil(T * k * cf / max(buckets, 1)))
+    return max(8, _ceil_to(c, 8))
+
+
+def _moe_local_all(p, xt, ids, gates, cfg, plan):
+    """Single-device smoke path: loop over all experts."""
+    _, _, _, ecell, e_pad, _ = moe_layout(plan)
+    T, D = xt.shape
+    k = ids.shape[-1]
+    cap = _capacity(T, k, e_pad, plan.moe.capacity_factor)
+    out = jnp.zeros((T, D), xt.dtype)
+    wg, wu, wd = p["wg"][0], p["wu"][0], p["wd"][0]   # (Ecell=E_pad,...)
+    for e in range(e_pad):
+        match = (ids == e)                             # (T,k)
+        score = jnp.max(match.astype(jnp.float32), -1)
+        gate = jnp.sum(jnp.where(match, gates, 0.0), -1)
+        idx, valid = _select_topc(score, min(cap, T))
+        tok = jnp.take(xt, idx, axis=0)
+        y = _expert_ffn(wg[e], wu[e], wd[e], tok, cfg.activation)
+        y = y * (gate[idx] * valid)[:, None].astype(y.dtype)
+        out = out.at[idx].add(y)
+    return out
+
+
+def _moe_model_parallel(p, xt, ids, gates, cfg, plan, env):
+    """EP over the model ring: local select, compute, (caller) psum."""
+    _, split, n_groups, ecell, e_pad, _ = moe_layout(plan)
+    T, D = xt.shape
+    k = ids.shape[-1]
+    cap = _capacity(T, k, e_pad, plan.moe.capacity_factor)
+    cap = min(cap, T)
+    l = lax.axis_index(env.model)                      # linear EP index
+    g = l // split
+    wg, wu, wd = p["wg"][0], p["wu"][0], p["wd"][0]   # local (Ecell,...)
+    out = jnp.zeros((T, D), xt.dtype)
+    for c in range(ecell):
+        e = g * ecell + c                              # traced expert id
+        match = ids == e[..., None] if hasattr(e, "ndim") else ids == e
+        score = jnp.max(match.astype(jnp.float32), -1)
+        gate = jnp.sum(jnp.where(match, gates, 0.0), -1)
+        idx, valid = _select_topc(score, cap)
+        tok = jnp.take(xt, idx, axis=0)
+        y = _expert_ffn(wg[c], wu[c], wd[c], tok, cfg.activation)
+        y = y * (gate[idx] * valid)[:, None].astype(y.dtype)
+        out = out.at[idx].add(y)
+    return out
+
+
+def _moe_data_model(p, xt, ids, gates, cfg, plan, env):
+    """EP spanning (data, model): bucketed all-to-all over `data`.
+
+    Column `m` forwards an assignment (t, e) iff the (group(e), half)
+    cell whose model-column is `m` exists, i.e.
+    ``h* = (m - group(e)*split) mod tp`` with ``h* < split``; the
+    destination data row is ``(group(e)*split + h*) // tp``.
+    """
+    m_ax, d_ax = env.model, "data"
+    tp = env.tp
+    _, split, n_groups, ecell, e_pad, _ = moe_layout(plan)
+    T, D = xt.shape
+    k = ids.shape[-1]
+    dwidth = dict(zip(plan.mesh_axes, plan.mesh_shape))["data"]
+    cap = _capacity(T, k, dwidth * max(1, n_groups // dwidth),
+                    plan.moe.capacity_factor)
+    cap = min(cap, T * k)
+    m_idx = lax.axis_index(m_ax)
+
+    ids_f = ids.reshape(-1)                            # (T*k,)
+    gates_f = gates.reshape(-1)
+    tok_of = jnp.repeat(jnp.arange(T), k)
+    grp = ids_f // ecell
+    h_star = (m_idx - grp * split) % tp
+    sendable = h_star < split
+    dest_data = (grp * split + h_star) // tp           # (T*k,)
+
+    buckets_x, buckets_meta = [], []
+    for dd in range(dwidth):
+        score = (sendable & (dest_data == dd)).astype(jnp.float32)
+        # prefer high-gate assignments under capacity pressure
+        idx, valid = _select_topc(score * (1.0 + gates_f), cap)
+        ok = valid & (score[idx] > 0)
+        bx = jnp.take(xt, jnp.take(tok_of, idx), axis=0)
+        bx = bx * ok[:, None].astype(bx.dtype)
+        meta = jnp.stack([jnp.take(tok_of, idx).astype(jnp.float32),
+                          jnp.take(ids_f, idx).astype(jnp.float32),
+                          jnp.take(gates_f, idx) * ok], -1)
+        buckets_x.append(bx)
+        buckets_meta.append(meta)
+    bx = jnp.stack(buckets_x, 0)                       # (dwidth, cap, D)
+    bm = jnp.stack(buckets_meta, 0)                    # (dwidth, cap, 3)
+    rx = lax.all_to_all(bx, d_ax, split_axis=0, concat_axis=0, tiled=False)
+    rm = lax.all_to_all(bm, d_ax, split_axis=0, concat_axis=0, tiled=False)
+
+    # this rank's cell: group g_mine, half h_mine
+    d_idx = lax.axis_index(d_ax)
+    l = d_idx * tp + m_idx
+    g_mine = l // split
+    r_ids = rm[..., 1].astype(jnp.int32)               # (dwidth, cap)
+    r_gate = rm[..., 2]
+    y = jnp.zeros_like(rx)
+    for c in range(ecell):
+        e = g_mine * ecell + c
+        mask = (r_ids == e) & (r_gate > 0)
+        xin = rx * mask[..., None].astype(rx.dtype)
+        yc = _expert_ffn(p["wg"][0, c], p["wu"][0, c], p["wd"][0, c],
+                         xin, cfg.activation)
+        y = y + yc * mask[..., None].astype(yc.dtype)
+    y = y * r_gate[..., None].astype(y.dtype)
+
+    back = lax.all_to_all(y, d_ax, split_axis=0, concat_axis=0, tiled=False)
+    out = jnp.zeros((T, D), xt.dtype)
+    for dd in range(dwidth):
+        t_idx = bm[dd, :, 0].astype(jnp.int32)
+        out = out.at[t_idx].add(back[dd])
+    return out

@@ -1,0 +1,312 @@
+"""RWKV6 ("Finch") — attention-free, data-dependent per-channel decay.
+
+The purest case for the LPU thesis: decode has *no* KV cache at all —
+per-layer state is one (head_dim x head_dim) matrix per head plus two
+shift vectors, so token latency is entirely weight-streaming bound.
+
+Sharding: heads (= channel blocks of head_dim) are column tiles over the
+model ring; token-shift, decay and the WKV recurrence are per-channel and
+stay rank-local.  r/k/v/g projections stream through ``ag_matmul``; the
+output projection streams partials back (``rs_matmul``).
+
+Ref recurrence (validated against the Pallas ``rwkv_scan`` kernel):
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(w0 + lora_w(x_t))) in (0,1), per channel.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import esl
+from repro.core.dist import AxisEnv, model_rank
+from repro.models.common import InitCtx
+
+Params = Dict[str, Any]
+
+_MIX = ("r", "k", "v", "g", "w")
+
+
+def rwkv_dims(cfg, plan) -> Tuple[int, int, int]:
+    """(heads_padded_total, heads_per_rank, head_dim)."""
+    a = plan.attn
+    return a.hp, a.q_per_rank, cfg.rwkv.head_dim
+
+
+def init_time_mix(ctx: InitCtx, cfg, plan, name: str = "tmix") -> Params:
+    r = cfg.rwkv
+    D = cfg.d_model
+    hp, hpr, dh = rwkv_dims(cfg, plan)
+    dproj = hp * dh                                    # padded head width
+    with ctx.scope(name):
+        p: Params = {}
+        p["mu_x"] = ctx.param("mu_x", (D,), ("vec",), init="uniform",
+                              scale=0.5)
+        for nm in _MIX:
+            p[f"mu_{nm}"] = ctx.param(f"mu_{nm}", (D,), ("vec",),
+                                      init="uniform", scale=0.5)
+        p["mix_w1"] = ctx.param("mix_w1", (D, 5 * r.mix_lora),
+                                ("embed", "lora"), scale=1.0)
+        p["mix_w2"] = ctx.param("mix_w2", (5, r.mix_lora, D),
+                                (None, "lora", "embed_scatter"), scale=0.1)
+        for nm in ("r", "k", "v", "g"):
+            p[f"w_{nm}"] = ctx.param(f"w_{nm}", (D, dproj),
+                                     ("embed", "rwkv_heads"), scale=1.0)
+        p["w_o"] = ctx.param("w_o", (dproj, D), ("rwkv_heads", "embed"),
+                             scale=1.0)
+        p["decay_w0"] = ctx.param("decay_w0", (dproj,), ("rwkv_heads",),
+                                  init="uniform", scale=1.0)
+        p["decay_w1"] = ctx.param("decay_w1", (D, r.decay_lora),
+                                  ("embed", "lora"), scale=1.0)
+        p["decay_w2"] = ctx.param("decay_w2", (r.decay_lora, dproj),
+                                  ("lora", "rwkv_heads"), scale=0.1)
+        p["bonus_u"] = ctx.param("bonus_u", (dproj,), ("rwkv_heads",),
+                                 init="uniform", scale=0.5)
+        p["ln_x"] = ctx.param("ln_x", (dproj,), ("rwkv_heads",), init="ones")
+    return p
+
+
+def init_channel_mix(ctx: InitCtx, cfg, plan, name: str = "cmix") -> Params:
+    D = cfg.d_model
+    ff = plan.d_ff_padded
+    with ctx.scope(name):
+        return {
+            "mu_k": ctx.param("mu_k", (D,), ("vec",), init="uniform",
+                              scale=0.5),
+            "mu_r": ctx.param("mu_r", (D,), ("vec",), init="uniform",
+                              scale=0.5),
+            "w_k": ctx.param("w_k", (D, ff), ("embed", "ffn"), scale=1.0),
+            "w_v": ctx.param("w_v", (ff, D), ("ffn", "embed"), scale=1.0),
+            # receptance: column tiles so r matches the scattered output
+            "w_r": ctx.param("w_r", (D, D), ("embed", "ffn"), scale=1.0),
+        }
+
+
+# ---------------------------------------------------------------------------
+# token shift (works identically on scattered channels)
+# ---------------------------------------------------------------------------
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1}; `prev` is the carried last token for decode/continuation."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _vslice(v: jax.Array, env: AxisEnv, plan) -> jax.Array:
+    """'vec' params arrive model-sharded; gather only in the blocking
+    baseline where activations are full."""
+    return esl.full_vec(v, axis=env.model, tp=env.tp,
+                        scattered_activations=plan.esl_overlap)
+
+
+def _head_local(v: jax.Array, env: AxisEnv, plan) -> jax.Array:
+    """'rwkv_heads' params arrive as the local head slice already."""
+    return v
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence (ref path; kernels/rwkv_scan is the Pallas twin)
+# ---------------------------------------------------------------------------
+
+def wkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, s0: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """r,k,v,w: (B,S,H,dh) f32; u: (H,dh); s0: (B,H,dh,dh) f32.
+
+    Returns (y (B,S,H,dh), s_final).  Per-step reference recurrence.
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp                           # (B,H,dh)
+        kv = kt[..., :, None] * vt[..., None, :]       # (B,H,dh,dh)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[..., None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    rs, ks, vs, ws = (t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    s_fin, ys = lax.scan(step, s0, (rs, ks, vs, ws))
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                u: jax.Array, s0: jax.Array, chunk: int = 32
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV — §Perf iteration (rwkv x train_4k).
+
+    The per-step scan writes the (dh x dh) state to HBM every token:
+    2 x 4.2 MB x S x L per device.  Chunking the recurrence (the same
+    dataflow the Pallas kernel uses with VMEM-resident state) cuts state
+    traffic by the chunk length and turns the inner math into dense
+    einsums.  Numerically stable: every decay exponent is <= 0
+    (L is non-increasing, so L_{t-1}-L_s <= 0 for s < t, and
+    L_last - L_s <= 0).
+
+    Matches ``wkv_scan`` to ~1e-4 (tests/test_rwkv_chunked.py).
+    """
+    B, S, H, dh = r.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        zeros = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    n = (S + pad) // chunk
+
+    def to_chunks(t):
+        return t.reshape(B, n, chunk, H, dh).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc = to_chunks(r), to_chunks(k), to_chunks(v)  # (n,B,H,C,dh)
+    lw = jnp.log(jnp.maximum(to_chunks(w), 1e-38))
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+
+    def body(s, inp):
+        rb, kb, vb, lwb = inp                         # (B,H,C,dh)
+        L = jnp.cumsum(lwb, axis=2)                   # inclusive
+        L_in = L - lwb                                # exclusive (L_{t-1})
+        Lc = L[:, :, -1:, :]                          # (B,H,1,dh)
+        # carry contribution: (r_t * exp(L_{t-1})) . S
+        y_carry = jnp.einsum("bhtd,bhdv->bhtv", rb * jnp.exp(L_in), s)
+        # intra-chunk: M[t,s] = sum_d r_t exp(L_{t-1}-L_s) k_s, s<t
+        decay = jnp.exp(jnp.clip(L_in[:, :, :, None, :]
+                                 - L[:, :, None, :, :], -60.0, 0.0))
+        m = jnp.einsum("bhtd,bhtsd,bhsd->bhts", rb, decay, kb)
+        m = m * tri
+        y_intra = jnp.einsum("bhts,bhsv->bhtv", m, vb)
+        # diagonal bonus
+        y_diag = jnp.sum(rb * u[None, :, None, :] * kb, -1,
+                         keepdims=True) * vb
+        # state update: S' = exp(Lc) . S + sum_s (k_s exp(Lc - L_s)) v_s
+        k_dec = kb * jnp.exp(jnp.clip(Lc - L, -60.0, 0.0))
+        s_new = jnp.exp(Lc[:, :, 0, :, None]) * s + \
+            jnp.einsum("bhsd,bhsv->bhdv", k_dec, vb)
+        return s_new, y_carry + y_intra + y_diag
+
+    s_fin, ys = lax.scan(body, s0, (rc, kc, vc, lw))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, n * chunk, H, dh)
+    return y[:, :S], s_fin
+
+
+def time_mix_fwd(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
+                 state: Optional[Dict[str, jax.Array]] = None
+                 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B,S,D/tp) scattered or (B,S,D) full.
+
+    state: {'shift': (B,1,D[/tp]), 'wkv': (B,hpr,dh,dh)} decode carry.
+    """
+    overlap = plan.esl_overlap
+    hp, hpr, dh = rwkv_dims(cfg, plan)
+    B, S = x.shape[0], x.shape[1]
+    prev = state["shift"] if state is not None else None
+    xx = _shift(x, prev)
+    dx = xx - x
+
+    # data-dependent token-shift lerps (low-rank adjusted)
+    xm = x + dx * _vslice(p["mu_x"], env, plan)
+    lora = jnp.tanh(esl.ag_matmul(xm, p["mix_w1"], axis=env.model,
+                                  tp=env.tp, overlap=overlap))
+    lora = lora.reshape(B, S, 5, -1)
+    mixed = {}
+    for i, nm in enumerate(_MIX):
+        adj = jnp.einsum("bsl,ld->bsd", lora[:, :, i],
+                         _mix_w2_local(p["mix_w2"], i, env, plan))
+        mu = _vslice(p[f"mu_{nm}"], env, plan)
+        mixed[nm] = x + dx * (mu + adj)
+
+    r = esl.ag_matmul(mixed["r"], p["w_r"], axis=env.model, tp=env.tp,
+                      overlap=overlap)
+    kk = esl.ag_matmul(mixed["k"], p["w_k"], axis=env.model, tp=env.tp,
+                       overlap=overlap)
+    vv = esl.ag_matmul(mixed["v"], p["w_v"], axis=env.model, tp=env.tp,
+                       overlap=overlap)
+    g = jax.nn.silu(esl.ag_matmul(mixed["g"], p["w_g"], axis=env.model,
+                                  tp=env.tp, overlap=overlap))
+    dlo = jnp.tanh(esl.ag_matmul(mixed["w"], p["decay_w1"], axis=env.model,
+                                 tp=env.tp, overlap=overlap))
+    dw = jnp.einsum("bsl,lc->bsc", dlo, _head_local(p["decay_w2"], env, plan))
+    w0 = _head_local(p["decay_w0"], env, plan)
+    w = jnp.exp(-jnp.exp((w0 + dw).astype(jnp.float32)))   # (B,S,C), (0,1)
+
+    u = _head_local(p["bonus_u"], env, plan)
+    shp = (B, S, hpr, dh)
+    rr, kk4, vv4, ww = (t.astype(jnp.float32).reshape(shp)
+                        for t in (r, kk, vv, w))
+    s0 = (state["wkv"].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, hpr, dh, dh), jnp.float32))
+    if S > 1:
+        # chunked formulation: state stays resident across a chunk
+        # (§Perf: 6.7e6 ms -> see EXPERIMENTS.md; per-step scan spilled
+        # the state matrix to HBM every token)
+        y, s_fin = wkv_chunked(rr, kk4, vv4, ww, u.reshape(hpr, dh), s0)
+    else:
+        y, s_fin = wkv_scan(rr, kk4, vv4, ww, u.reshape(hpr, dh), s0)
+
+    # per-head group norm
+    mean = jnp.mean(y, -1, keepdims=True)
+    var = jnp.var(y, -1, keepdims=True)
+    y = (y - mean) * lax.rsqrt(var + 1e-5)
+    y = y.reshape(B, S, hpr * dh) * _head_local(p["ln_x"], env, plan)
+    y = y.astype(x.dtype) * g
+
+    out = esl.rs_matmul(y, p["w_o"], axis=env.model, tp=env.tp,
+                        overlap=overlap, scatter_out=overlap)
+    new_state = None
+    if state is not None:
+        new_state = {"shift": x[:, -1:, :], "wkv": s_fin}
+    return out, new_state
+
+
+def _mix_w2_local(w2: jax.Array, i: int, env: AxisEnv, plan) -> jax.Array:
+    """mix_w2[i]: arrives (lora, D/tp) local ('embed_scatter'); in the
+    blocking baseline the lerp target x is full, so gather."""
+    w = w2[i]
+    if plan.esl_overlap or env.model is None:
+        return w
+    return lax.all_gather(w, env.model, axis=w.ndim - 1, tiled=True)
+
+
+def channel_mix_fwd(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
+                    state: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """state: (B,1,D[/tp]) previous-token carry (decode)."""
+    overlap = plan.esl_overlap
+    xx = _shift(x, state)
+    dx = xx - x
+    xk = x + dx * _vslice(p["mu_k"], env, plan)
+    xr = x + dx * _vslice(p["mu_r"], env, plan)
+    kk = esl.ag_matmul(xk, p["w_k"], axis=env.model, tp=env.tp,
+                       overlap=overlap)
+    kk = jnp.square(jax.nn.relu(kk))
+    y = esl.rs_matmul(kk, p["w_v"], axis=env.model, tp=env.tp,
+                      overlap=overlap, scatter_out=overlap)
+    rr = esl.ag_matmul(xr, p["w_r"], axis=env.model, tp=env.tp,
+                       overlap=overlap)
+    if not overlap and env.model is not None:
+        rr = esl.gather_scattered(rr, axis=env.model, tp=env.tp)
+    y = jax.nn.sigmoid(rr.astype(jnp.float32)).astype(y.dtype) * y
+    new_state = x[:, -1:, :] if state is not None else None
+    return y, new_state
+
+
+def init_rwkv_state(cfg, plan, batch: int, abstract: bool = False,
+                    dtype=jnp.bfloat16):
+    """Decode carry for one rwkv layer (global shapes)."""
+    hp, hpr, dh = rwkv_dims(cfg, plan)
+    D = cfg.d_model
+    scattered = plan.esl_overlap and plan.mesh_axes is not None
+    d_shift = D  # stored full; sliced on entry when scattered
+    shift = (batch, 1, d_shift)
+    wkv = (batch, hp, dh, dh)
+    if abstract:
+        return {"shift_t": jax.ShapeDtypeStruct(shift, dtype),
+                "shift_c": jax.ShapeDtypeStruct(shift, dtype),
+                "wkv": jax.ShapeDtypeStruct(wkv, jnp.float32)}
+    return {"shift_t": jnp.zeros(shift, dtype),
+            "shift_c": jnp.zeros(shift, dtype),
+            "wkv": jnp.zeros(wkv, jnp.float32)}

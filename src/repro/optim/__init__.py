@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.schedule import cosine_schedule, wsd_schedule, get_schedule
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "wsd_schedule",
+           "get_schedule"]

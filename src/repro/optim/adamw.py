@@ -1,0 +1,113 @@
+"""AdamW with global-norm clipping, built from scratch (no optax).
+
+The optimizer state is sharded *identically to the parameters* (ZeRO:
+the mapper's PartitionSpecs apply verbatim to m/v), so the update is a
+purely elementwise jit region — no communication except the grad-norm
+all-reduce, which XLA emits from the global-norm reduction.
+
+``grad_compress='int8'`` enables error-feedback int8 quantization of the
+cross-pod gradient sync (the distributed-optimization trick for slow DCI
+links); it is applied by the train driver on the pod axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+@dataclass
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params: Params) -> OptState:
+        zeros = lambda t: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), t)
+        return OptState(step=jnp.zeros((), jnp.int32), m=zeros(params),
+                        v=zeros(params))
+
+    def init_abstract(self, params: Params) -> OptState:
+        zeros = lambda t: jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), t)
+        return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                        m=zeros(params), v=zeros(params))
+
+    def apply(self, params: Params, grads: Params, state: OptState
+              ) -> Tuple[Params, OptState, Dict[str, jax.Array]]:
+        step = state.step + 1
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree.leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        lr = self.lr(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh = m / b1c
+            vh = v / b2c
+            step_p = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:                      # decay matrices only
+                step_p = step_p + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_p).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step, new_m, new_v), {
+            "grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (cross-pod sync over slow DCI links)
+# ---------------------------------------------------------------------------
+
+def int8_compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization."""
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    q = jnp.clip(jnp.round(g / amax * 127.0), -127, 127).astype(jnp.int8)
+    return q, amax
+
+
+def int8_decompress(q: jax.Array, amax: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * (amax / 127.0)
+
+
+def compressed_psum(g: jax.Array, axis_name: str,
+                    err: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 all-reduce over `axis_name`.
+
+    Returns (summed_grad_f32, new_error_residual).  The residual carries
+    quantization error into the next step (Karimireddy et al., EF-SGD).
+    """
+    gf = g.astype(jnp.float32)
+    if err is not None:
+        gf = gf + err
+    q, amax = int8_compress(gf)
+    deq = int8_decompress(q, amax)
+    new_err = gf - deq
+    summed = jax.lax.psum(deq, axis_name)
+    return summed, new_err

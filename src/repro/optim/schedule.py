@@ -1,0 +1,46 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay, MiniCPM).
+
+Pure functions of the step counter — jit-safe.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, min_ratio: float = 0.01):
+    """Warmup -> Stable (constant) -> Decay (last `decay_frac` of steps).
+
+    MiniCPM's schedule (arXiv:2404.06395): exponential-ish decay tail
+    approximated by the published 'sqrt-linear' ramp.
+    """
+    decay_start = int(total * (1 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - decay_start) /
+                     jnp.maximum(total - decay_start, 1), 0, 1)
+        decay = base_lr * (min_ratio ** t)
+        stable = jnp.full_like(step, base_lr)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < decay_start, stable, decay))
+        return out
+    return lr
+
+
+def get_schedule(name: str, base_lr: float, warmup: int, total: int):
+    if name == "wsd":
+        return wsd_schedule(base_lr, warmup, total)
+    return cosine_schedule(base_lr, warmup, total)

@@ -1,0 +1,163 @@
+"""HyperDex-style runtime layer: HuggingFace-like generation engine.
+
+``LPUEngine`` mirrors the paper's runtime API surface
+(AutoModelForCausalLM-ish): ``generate(prompts, max_new_tokens,
+temperature/top_k/top_p, stream_cb)``.  Below the API sits the
+slot-based **continuous batching** scheduler (the paper's "batch mode"
+future work, implemented here): a fixed decode batch of B slots; new
+requests claim free slots at step boundaries, finished sequences
+release them mid-flight.  Per-request sampling params are carried per
+slot (the paper's per-request control registers).
+
+Monitoring hooks expose tokens/s, slot occupancy and step latency —
+the datacenter-level statistics HyperDex exposes from its driver.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dist import make_axis_env
+from repro.serving.sampler import SamplingParams, sample_sharded
+
+StreamCB = Callable[[int, int], None]   # (request_id, token)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    params: SamplingParams = SamplingParams()
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+    stream_cb: Optional[StreamCB] = None
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    tokens: int = 0
+    busy_slot_steps: int = 0
+    slot_steps: int = 0
+    wall: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.wall if self.wall else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        return self.busy_slot_steps / max(self.slot_steps, 1)
+
+
+class LPUEngine:
+    """Slot-based continuous-batching decode engine (single host)."""
+
+    def __init__(self, model, params, *, slots: int = 4,
+                 max_seq: int = 256, eos_id: Optional[int] = None,
+                 rng: Optional[jax.Array] = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.plan = model.plan
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.env = make_axis_env(self.plan, batch=slots)
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.cache = model.init_cache(slots, max_seq)
+        self.positions = np.zeros((slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.last_token = np.zeros((slots,), np.int32)
+        self.stats = EngineStats()
+        self._decode = jax.jit(self._decode_fn, static_argnums=(5, 6, 7))
+        self._prefill = jax.jit(self._prefill_fn, static_argnums=(3,))
+
+    # -- jitted steps --------------------------------------------------
+
+    def _decode_fn(self, params, cache, tokens, positions, rng, temp, topk,
+                   topp):
+        logits, new_cache, _ = self.model.forward(
+            params, tokens, env=self.env, mode="decode",
+            positions=positions, cache=cache)
+        sp = SamplingParams(temp, topk, topp)
+        nxt = sample_sharded(logits[:, -1], rng, sp, None, 1)
+        return nxt, logits[:, -1], new_cache
+
+    def _prefill_fn(self, params, cache, tokens, true_len):
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]),
+                                     tokens.shape)
+        logits, new_cache, _ = self.model.forward(
+            params, tokens, env=self.env, mode="prefill", cache=cache,
+            positions=positions)
+        return logits[:, true_len - 1], new_cache
+
+    # -- scheduling ------------------------------------------------------
+
+    def _admit(self, queue: List[Request]):
+        for s in range(self.slots):
+            if self.active[s] is None and queue:
+                req = queue.pop(0)
+                ptoks = np.asarray(req.prompt, np.int32)[None]
+                # prefill this slot (batch=slots: pad others, cheap here)
+                full = np.zeros((self.slots, ptoks.shape[1]), np.int32)
+                full[s] = ptoks
+                logits, cache = self._prefill(self.params, self.cache,
+                                              jnp.asarray(full),
+                                              int(ptoks.shape[1]))
+                self.cache = cache
+                self.active[s] = req
+                self.positions[s] = len(req.prompt)
+                lg = np.asarray(logits[s])
+                self.last_token[s] = int(lg.argmax())
+                req.out.append(int(self.last_token[s]))
+                if req.stream_cb:
+                    req.stream_cb(req.rid, int(self.last_token[s]))
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 max_new_tokens: int = 32,
+                 params: Optional[SamplingParams] = None,
+                 stream_cb: Optional[StreamCB] = None) -> List[List[int]]:
+        """HF-like entry point: batch of prompts -> generated ids."""
+        params = params or SamplingParams(0.0, 0, 1.0)   # greedy default
+        queue = [Request(i, list(p), max_new_tokens, params,
+                         stream_cb=stream_cb)
+                 for i, p in enumerate(prompts)]
+        results: Dict[int, List[int]] = {}
+        t0 = time.time()
+        while queue or any(a is not None for a in self.active):
+            self._admit(queue)
+            toks = jnp.asarray(self.last_token[:, None])
+            pos = jnp.asarray(self.positions)
+            self.rng, sub = jax.random.split(self.rng)
+            nxt, logits, self.cache = self._decode(
+                self.params, self.cache, toks, pos, sub,
+                params.temperature, params.top_k, params.top_p)
+            nxt = np.asarray(nxt)
+            self.stats.steps += 1
+            self.stats.slot_steps += self.slots
+            for s, req in enumerate(self.active):
+                if req is None:
+                    continue
+                self.stats.busy_slot_steps += 1
+                self.stats.tokens += 1
+                tok = int(nxt[s])
+                req.out.append(tok)
+                self.positions[s] += 1
+                self.last_token[s] = tok
+                if req.stream_cb:
+                    req.stream_cb(req.rid, tok)
+                if (len(req.out) >= req.max_new_tokens
+                        or (self.eos_id is not None and tok == self.eos_id)
+                        or self.positions[s] >= self.max_seq - 1):
+                    req.done = True
+                    results[req.rid] = req.out
+                    self.active[s] = None     # release slot mid-flight
+        self.stats.wall = time.time() - t0
+        return [results[i] for i in sorted(results)]

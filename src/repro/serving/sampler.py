@@ -1,0 +1,70 @@
+"""Token sampler — the VXE "sampling with sort" instruction.
+
+temperature / top-k / top-p over (possibly vocab-sharded) logits.
+Sharded path: each rank pre-selects its local top-k (k<=64), the tiny
+(tp x k) candidate set is all-gathered, and the final softmax/sort runs
+on that — the full logits row never crosses the ring (paper: the sampler
+sorts logits on-chip for the same reason).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class SamplingParams(NamedTuple):
+    temperature: float = 1.0
+    top_k: int = 0              # 0 = off
+    top_p: float = 1.0          # 1 = off
+
+
+MAX_LOCAL_K = 64
+
+
+def sample_local(logits: jax.Array, rng: jax.Array,
+                 params: SamplingParams) -> jax.Array:
+    """logits: (B, V) full -> (B,) sampled token ids."""
+    lg = logits.astype(jnp.float32)
+    if params.temperature <= 0.0:
+        return jnp.argmax(lg, -1).astype(jnp.int32)
+    lg = lg / jnp.maximum(params.temperature, 1e-6)
+    if params.top_k and params.top_k > 0:
+        kth = jnp.sort(lg, -1)[:, -params.top_k][:, None]
+        lg = jnp.where(lg >= kth, lg, -jnp.inf)
+    if params.top_p < 1.0:
+        sorted_lg = jnp.sort(lg, -1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_lg, -1)
+        cum = jnp.cumsum(probs, -1)
+        # keep the smallest prefix with cumulative mass >= top_p
+        keep = cum - probs < params.top_p
+        cutoff = jnp.max(jnp.where(keep, sorted_lg, -jnp.inf), -1,
+                         keepdims=True)
+        lg = jnp.where(lg >= cutoff, lg, -jnp.inf)
+    return jax.random.categorical(rng, lg, -1).astype(jnp.int32)
+
+
+def sample_sharded(logits_loc: jax.Array, rng: jax.Array,
+                   params: SamplingParams, axis_name: Optional[str],
+                   tp: int) -> jax.Array:
+    """logits_loc: (B, V/tp) vocab-sharded -> (B,) global token ids.
+
+    Every rank computes the same result (same rng), so the output is
+    replicated across the ring — no divergence.
+    """
+    if axis_name is None or tp == 1:
+        return sample_local(logits_loc, rng, params)
+    B, v_loc = logits_loc.shape
+    k = min(MAX_LOCAL_K, v_loc)
+    vals, idx = lax.top_k(logits_loc.astype(jnp.float32), k)
+    r = lax.axis_index(axis_name)
+    gidx = idx + r * v_loc
+    vals_all = lax.all_gather(vals, axis_name, axis=1)    # (B, tp, k)
+    gidx_all = lax.all_gather(gidx, axis_name, axis=1)
+    vals_all = vals_all.reshape(B, tp * k)
+    gidx_all = gidx_all.reshape(B, tp * k)
+    chosen = sample_local(vals_all, rng, params)          # (B,) in [0,tp*k)
+    return jnp.take_along_axis(gidx_all, chosen[:, None], 1)[:, 0]

@@ -1,0 +1,23 @@
+# NOTE: deliberately no XLA_FLAGS here — smoke tests must see ONE device.
+# Multi-device tests spawn subprocesses (tests/util.py) that set the flag
+# before importing jax.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+def pytest_addoption(parser):
+    parser.addoption("--skip-slow", action="store_true", default=False,
+                     help="skip multi-device/training integration tests")
+
+
+def pytest_collection_modifyitems(config, items):
+    if not config.getoption("--skip-slow"):
+        return
+    skip = pytest.mark.skip(reason="--skip-slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

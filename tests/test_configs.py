@@ -1,0 +1,78 @@
+"""Config sanity: every assigned arch matches its published dims."""
+import pytest
+
+from repro.configs import ASSIGNED, REGISTRY, SHAPES, assigned_cells, \
+    get_config
+
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51_865),
+    "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151_936),
+    "deepseek-coder-33b": (62, 7168, 56, 8, 19_200, 32_256),
+    "minicpm-2b": (40, 2304, 36, 36, 5760, 122_753),
+    "smollm-135m": (30, 576, 9, 3, 1536, 49_152),
+    "llava-next-34b": (60, 7168, 56, 8, 20_480, 64_000),
+    "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49_155),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202_048),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14_336, 65_536),
+    "rwkv6-7b": (32, 4096, 64, 0, 14_336, 65_536),
+}
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_assigned_dims(name):
+    cfg = get_config(name)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == EXPECTED[name]
+
+
+def test_ten_archs_assigned():
+    assert len(ASSIGNED) == 10
+
+
+def test_cells_account_for_40():
+    run, skip = assigned_cells()
+    assert len(run) + len(skip) == 40
+    # long_500k runs only for sub-quadratic archs
+    for arch, shape in run:
+        if shape == "long_500k":
+            assert get_config(arch).family in ("hybrid", "rwkv")
+
+
+@pytest.mark.parametrize("name,lo,hi", [
+    ("smollm-135m", 0.12e9, 0.15e9),
+    ("deepseek-coder-33b", 32e9, 35e9),
+    ("qwen1.5-4b", 3.5e9, 4.4e9),
+    ("minicpm-2b", 2.4e9, 3.1e9),
+    ("jamba-v0.1-52b", 50e9, 54e9),
+    ("rwkv6-7b", 6.6e9, 7.6e9),
+    ("llama4-maverick-400b-a17b", 380e9, 420e9),
+    ("opt-66b", 64e9, 68e9),
+    ("gpt3-20b", 19e9, 22e9),
+])
+def test_param_counts_match_names(name, lo, hi):
+    assert lo <= get_config(name).total_params() <= hi
+
+
+@pytest.mark.parametrize("name,lo,hi", [
+    ("granite-moe-3b-a800m", 0.7e9, 1.0e9),      # a800m
+    ("llama4-maverick-400b-a17b", 12e9, 20e9),   # a17b
+    ("jamba-v0.1-52b", 10e9, 14e9),              # published ~12B active
+])
+def test_moe_active_params(name, lo, hi):
+    assert lo <= get_config(name).active_params() <= hi
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_reduced_configs_small(name):
+    red = get_config(name).reduced()
+    assert red.total_params() < 50e6
+    assert red.d_model <= 256
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].tokens == 4096 * 256
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].global_batch == 1

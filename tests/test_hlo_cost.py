@@ -1,0 +1,64 @@
+"""HLO cost parser: must match XLA cost_analysis on unrolled modules and
+correctly multiply while-loop (scan) bodies by trip counts."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.core.hlo_cost import module_cost
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_unrolled_matches_xla():
+    def f(w, x):
+        for i in range(8):
+            x = x @ w[i]
+        return x
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = _compile(f, w, x)
+    assert module_cost(c.as_text()).flops == \
+        pytest.approx(c.cost_analysis()["flops"], rel=1e-6)
+
+
+def test_scan_trip_count_multiplied():
+    def f(w, x):
+        def body(cc, wi):
+            return cc @ wi, None
+        y, _ = lax.scan(body, x, w)
+        return y
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = _compile(f, w, x)
+    # XLA counts the body once; parser counts all 8 trips
+    assert module_cost(c.as_text()).flops == \
+        pytest.approx(8 * c.cost_analysis()["flops"], rel=1e-6)
+
+
+def test_nested_scan():
+    def f(w, x):
+        def outer(cc, wi):
+            def inner(c2, _):
+                return c2 @ wi, None
+            c2, _ = lax.scan(inner, cc, None, length=4)
+            return c2, None
+        y, _ = lax.scan(outer, x, w)
+        return y
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = _compile(f, w, x)
+    expect = 8 * 4 * 2 * 128 ** 3
+    assert module_cost(c.as_text()).flops == pytest.approx(expect, rel=1e-6)
+
+
+def test_hbm_bytes_scale_with_size():
+    def f(x):
+        return (x * 2.0).sum()
+    small = _compile(f, jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    big = _compile(f, jax.ShapeDtypeStruct((512, 512), jnp.float32))
+    bs = module_cost(small.as_text()).hbm_bytes
+    bb = module_cost(big.as_text()).hbm_bytes
+    assert bb > 8 * bs

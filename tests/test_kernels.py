@@ -1,0 +1,96 @@
+"""Per-kernel allclose sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_ref)
+from repro.kernels.gemv import gemv, gemv_ref
+from repro.kernels.mamba_scan import mamba_scan, mamba_scan_ref
+from repro.kernels.rwkv_scan import rwkv_scan, rwkv_scan_ref
+
+K0 = jax.random.PRNGKey(0)
+
+
+def _tol(dt):
+    return dict(rtol=3e-2, atol=3e-2) if dt == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,K,N", [(1, 128, 128), (8, 512, 1024),
+                                   (4, 1024, 384), (2, 256, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bias", [False, True])
+def test_gemv(B, K, N, dtype, bias):
+    x = jax.random.normal(K0, (B, K), dtype)
+    w = jax.random.normal(jax.random.fold_in(K0, 1), (K, N), dtype)
+    b = jax.random.normal(jax.random.fold_in(K0, 2), (N,), dtype) \
+        if bias else None
+    got = gemv(x, w, b)
+    ref = gemv_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,G,gs,dh", [
+    (2, 512, 2, 4, 128), (1, 1024, 1, 8, 128), (3, 384, 4, 1, 128),
+    (2, 256, 8, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, S, G, gs, dh, dtype):
+    H = G * gs
+    q = jax.random.normal(K0, (B, H, dh), dtype)
+    k = jax.random.normal(jax.random.fold_in(K0, 3), (B, S, G, dh), dtype)
+    v = jax.random.normal(jax.random.fold_in(K0, 4), (B, S, G, dh), dtype)
+    lengths = jnp.asarray(
+        np.random.RandomState(0).randint(1, S + 1, size=B), jnp.int32)
+    got = decode_attention(q, k, v, lengths)
+    ke = jnp.repeat(k, gs, 2)
+    ve = jnp.repeat(v, gs, 2)
+    ref = decode_attention_ref(q, ke, ve, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,C,N", [(1, 32, 8, 8), (2, 128, 16, 16),
+                                     (2, 64, 32, 8)])
+def test_mamba_scan(B, S, C, N):
+    da = jax.random.uniform(K0, (B, S, C, N), minval=0.5, maxval=0.99)
+    bx = 0.1 * jax.random.normal(jax.random.fold_in(K0, 5), (B, S, C, N))
+    c = jax.random.normal(jax.random.fold_in(K0, 6), (B, S, N))
+    h0 = 0.1 * jax.random.normal(jax.random.fold_in(K0, 7), (B, C, N))
+    y, h = mamba_scan(da, bx, c, h0)
+    yr, hr = mamba_scan_ref(da, bx, c, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,dh", [(1, 16, 1, 8), (2, 64, 2, 16),
+                                      (2, 32, 4, 32)])
+def test_rwkv_scan(B, S, H, dh):
+    r = jax.random.normal(K0, (B, S, H, dh))
+    k = 0.3 * jax.random.normal(jax.random.fold_in(K0, 8), (B, S, H, dh))
+    v = jax.random.normal(jax.random.fold_in(K0, 9), (B, S, H, dh))
+    w = jax.random.uniform(jax.random.fold_in(K0, 10), (B, S, H, dh),
+                           minval=0.8, maxval=0.999)
+    u = 0.2 * jax.random.normal(jax.random.fold_in(K0, 11), (H, dh))
+    s0 = 0.1 * jax.random.normal(jax.random.fold_in(K0, 12),
+                                 (B, H, dh, dh))
+    y, s = rwkv_scan(r, k, v, w, u, s0)
+    yr, sr = rwkv_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gemv_state_reset_between_calls():
+    """Grid re-execution must re-init the accumulator."""
+    x = jnp.ones((2, 256), jnp.float32)
+    w = jnp.ones((256, 256), jnp.float32)
+    a = gemv(x, w)
+    b = gemv(x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))

@@ -1,0 +1,72 @@
+"""The latency model must reproduce the paper's published claims."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.latency_model import (LPU_ASIC, fit_vector_params,
+                                      scaling_curve, token_latency)
+
+KV = 32 + 2016 // 2
+PTS = [("opt-1.3b", 1, 1.25), ("opt-6.7b", 1, 4.62), ("opt-66b", 2, 22.2)]
+
+
+@pytest.fixture(scope="module")
+def calib():
+    pts = [(get_config(n), d, LPU_ASIC, KV, ms) for n, d, ms in PTS]
+    return fit_vector_params(pts)
+
+
+def test_latency_calibration_residuals(calib):
+    a, b, c, err = calib
+    assert a >= 0 and b >= 0 and c >= 0
+    # 6.7B and 66B within 5%; the 1.3B point is internally inconsistent
+    # with any non-negative model of this family (EXPERIMENTS.md) — 15%.
+    assert err < 0.15
+    for name, n, paper in PTS[1:]:
+        got = token_latency(get_config(name), n, LPU_ASIC, kv_len=KV,
+                            vec_a=a, vec_b=b, vec_c=c)["ms_per_token"]
+        assert abs(got - paper) / paper < 0.05, (name, got)
+
+
+def test_bandwidth_util_rises_with_size(calib):
+    a, b, c, _ = calib
+    utils = []
+    for name, n in [("opt-1.3b", 1), ("opt-6.7b", 1), ("opt-30b", 1),
+                    ("opt-66b", 2)]:
+        utils.append(token_latency(get_config(name), n, LPU_ASIC,
+                                   kv_len=KV, vec_a=a, vec_b=b,
+                                   vec_c=c)["bandwidth_util"])
+    assert utils == sorted(utils)
+    assert utils[-1] > 0.9                      # paper: 90.6% for 66B
+
+
+def test_heldout_30b_utilization(calib):
+    a, b, c, _ = calib
+    r = token_latency(get_config("opt-30b"), 1, LPU_ASIC, kv_len=KV,
+                      vec_a=a, vec_b=b, vec_c=c)
+    assert abs(r["bandwidth_util"] - 0.902) < 0.05    # paper 90.2%
+
+
+def test_scaling_beats_blocking(calib):
+    a, b, c, _ = calib
+    cfg = get_config("gpt3-20b")
+    kw = dict(kv_len=KV, vec_a=a, vec_b=b, vec_c=c)
+    esl = scaling_curve(cfg, LPU_ASIC, 8, overlap=True, **kw)
+    blk = scaling_curve(cfg, LPU_ASIC, 8, overlap=False, **kw)
+    # paper: 5.43x at 8 devices, ~1.75x per doubling; our model is within
+    # ~25% optimistic (no FPGA jitter) but must preserve the ordering and
+    # the near-linear-doubling property
+    assert esl[-1] > blk[-1]
+    assert esl[-1] > 5.0
+    per_doubling = esl[-1] ** (1 / 3)
+    assert 1.6 < per_doubling <= 2.0
+
+
+def test_esl_sync_latency_hidden(calib):
+    """ESL's exposed sync must be far below the blocking all-reduce."""
+    a, b, c, _ = calib
+    cfg = get_config("gpt3-20b")
+    on = token_latency(cfg, 8, LPU_ASIC, overlap=True, kv_len=KV,
+                       vec_a=a, vec_b=b, vec_c=c)["sync_ms"]
+    off = token_latency(cfg, 8, LPU_ASIC, overlap=False, kv_len=KV,
+                        vec_a=a, vec_b=b, vec_c=c)["sync_ms"]
+    assert on < off / 5

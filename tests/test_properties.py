@@ -1,0 +1,136 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compiler.plan import plan_attention
+from repro.compiler.mapper import plan_model
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.kernels.gemv import gemv, gemv_ref
+from repro.serving.sampler import SamplingParams, sample_local
+
+
+# ---------------------------------------------------------------------------
+# mapper invariants
+# ---------------------------------------------------------------------------
+
+@given(h_ratio=st.integers(1, 8), g=st.integers(1, 64),
+       tp=st.sampled_from([1, 2, 4, 8, 16, 32]))
+@settings(max_examples=200, deadline=None)
+def test_attention_plan_invariants(h_ratio, g, tp):
+    h = g * h_ratio
+    a = plan_attention(h, g, 64, tp)
+    # stored layout divides evenly across ranks
+    assert a.hp == a.q_per_rank * tp
+    assert a.gp == a.kv_per_rank * tp
+    assert a.hp >= h and a.gp >= g
+    # every original q head appears exactly once
+    reals = sorted(o for o in a.q_orig if o >= 0)
+    assert reals == list(range(h))
+    # the local map never crosses ranks
+    loc = a.q_to_kv_local
+    assert loc.min() >= 0 and loc.max() < a.kv_per_rank
+    # every real q head maps to its true kv group
+    gs = max(1, h // g)
+    for j, (orig, kv_stored) in enumerate(zip(a.q_orig, a.q_to_kv)):
+        if orig >= 0:
+            assert a.kv_orig[kv_stored] == orig // gs
+
+
+@given(tp=st.sampled_from([1, 2, 4, 8, 16]),
+       name=st.sampled_from(["smollm-135m", "deepseek-coder-33b",
+                             "granite-moe-3b-a800m", "qwen1.5-4b"]))
+@settings(max_examples=40, deadline=None)
+def test_plan_padded_dims_divisible(tp, name):
+    cfg = get_config(name)
+    axes = ("data", "model") if tp > 1 else None
+    plan = plan_model(cfg, axes, (2, tp) if tp > 1 else (1,), "train")
+    assert plan.d_ff_padded % max(plan.tp, 1) == 0
+    assert plan.d_ff_padded >= cfg.d_ff
+    assert plan.vocab_padded % max(plan.tp, 1) == 0
+    assert plan.vocab_padded >= cfg.vocab_size
+
+
+# ---------------------------------------------------------------------------
+# sampler invariants
+# ---------------------------------------------------------------------------
+
+@given(b=st.integers(1, 4), v=st.integers(8, 200),
+       temp=st.floats(0.1, 2.0), k=st.integers(0, 16),
+       p=st.floats(0.1, 1.0), seed=st.integers(0, 10_000))
+@settings(max_examples=100, deadline=None)
+def test_sampler_in_support(b, v, temp, k, p, seed):
+    rng = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(rng, (b, v))
+    tok = sample_local(logits, rng, SamplingParams(temp, min(k, v), p))
+    assert tok.shape == (b,)
+    assert int(tok.min()) >= 0 and int(tok.max()) < v
+    if k:
+        # sampled token must be within the top-k set
+        topk = jax.lax.top_k(logits, min(k, v))[1]
+        for i in range(b):
+            assert int(tok[i]) in np.asarray(topk[i])
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_sampler_greedy_is_argmax(seed):
+    rng = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(rng, (3, 50))
+    tok = sample_local(logits, rng, SamplingParams(0.0, 0, 1.0))
+    np.testing.assert_array_equal(np.asarray(tok),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline invariants (elastic determinism)
+# ---------------------------------------------------------------------------
+
+@given(step=st.integers(0, 50), gb=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 5))
+@settings(max_examples=50, deadline=None)
+def test_data_shard_invariance(step, gb, seed):
+    """Concatenated shards == unsharded batch, for any worker count."""
+    ds = SyntheticLM(vocab_size=997, seq_len=32, seed=seed)
+    full = ds.batch(step, gb, (0, 1))
+    for n_hosts in (2, 4):
+        if gb % n_hosts:
+            continue
+        parts = [ds.batch(step, gb, (h, n_hosts))["tokens"]
+                 for h in range(n_hosts)]
+        np.testing.assert_array_equal(np.concatenate(parts), full["tokens"])
+
+
+@given(seed=st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_data_tokens_in_vocab(seed):
+    ds = SyntheticLM(vocab_size=313, seq_len=16, seed=seed)
+    b = ds.batch(0, 4)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 313
+    # labels are next-token shifted
+    ex = ds.example(0)
+    np.testing.assert_array_equal(b["tokens"][0], ex[:-1])
+    np.testing.assert_array_equal(b["labels"][0], ex[1:])
+
+
+# ---------------------------------------------------------------------------
+# kernel property: gemv == ref on random aligned shapes
+# ---------------------------------------------------------------------------
+
+@given(b=st.integers(1, 8),
+       k=st.sampled_from([128, 256, 384]),
+       n=st.sampled_from([128, 512, 640]),
+       seed=st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_gemv_matches_ref(b, k, n, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (b, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    np.testing.assert_allclose(np.asarray(gemv(x, w)),
+                               np.asarray(gemv_ref(x, w)),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,32 @@
+"""Test helpers: subprocess runner for multi-device (fake-device) tests."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+PREAMBLE = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={n}'
+import sys
+sys.path.insert(0, {src!r})
+"""
+
+
+def run_multidevice(body: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run `body` in a fresh python with n fake devices; returns stdout."""
+    script = PREAMBLE.format(n=n_devices, src=SRC) + textwrap.dedent(body)
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=timeout,
+        env={**os.environ, "PYTHONPATH": SRC},
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multidevice subprocess failed:\nSTDOUT:\n{proc.stdout}\n"
+            f"STDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout
