@@ -52,6 +52,18 @@ for _c in list(_COLLECTIVES):
     _HBM_KINDS.add(_c + "-start")
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a dict; newer versions return a one-element list of
+    per-device dicts.  Always hand back a flat ``{metric: value}`` dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
 @dataclass
 class Cost:
     flops: float = 0.0
@@ -312,9 +324,15 @@ def module_cost(text: str, default_group: int = 1) -> Cost:
                         r"(?:calls|to_apply|branch_computations)=\{?%?([\w.\-]+)",
                         ins.line):
                     sub = comp_cost(called, stack + (name,))
-                    total += Cost(flops=sub.flops,
-                                  wire_bytes=sub.wire_bytes,
-                                  coll_counts=dict(sub.coll_counts))
+                    if kind == "call":
+                        # a plain call is inlined code (e.g. CPU
+                        # outer-dimension parallelization wrappers): its
+                        # body's HBM traffic is real, unlike a fusion's
+                        total += sub
+                    else:
+                        total += Cost(flops=sub.flops,
+                                      wire_bytes=sub.wire_bytes,
+                                      coll_counts=dict(sub.coll_counts))
         memo[name] = total
         return total
 

@@ -1,4 +1,9 @@
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                paged_decode_attention)
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                gather_kv_pages,
+                                                paged_decode_attention_ref)
 
-__all__ = ["decode_attention", "decode_attention_ref"]
+__all__ = ["decode_attention", "decode_attention_ref",
+           "paged_decode_attention", "paged_decode_attention_ref",
+           "gather_kv_pages"]

@@ -60,6 +60,93 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, t_blocks: int,
+                         block_s: int, scale: float):
+    """Paged variant: same online-softmax stream as ``_decode_kernel`` but
+    KV tiles are fetched through the block table (scalar-prefetched, so the
+    DMA address is known before the body runs — the LPU's address-generator
+    indirection).  Tile ``t`` covers logical positions [t*bs, (t+1)*bs)."""
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (gs, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (block_s, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    length = len_ref[b]
+    pos = t * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, -1e30)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(t == t_blocks - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
+                                  v_pages: jax.Array,
+                                  block_tables: jax.Array,
+                                  lengths: jax.Array, *,
+                                  interpret: bool = True) -> jax.Array:
+    """q: (B,H,dh); k_pages,v_pages: (N,bs,G,dh) shared pool with H = G*gs;
+    block_tables: (B,T) physical block per logical block; lengths: (B,).
+    Returns (B,H,dh).  The block table rides scalar prefetch so each KV
+    tile's pool address is resolved before its DMA issues."""
+    B, H, dh = q.shape
+    N, bs, G, _ = k_pages.shape
+    T = block_tables.shape[1]
+    assert H % G == 0, (H, G)
+    gs = H // G
+    qg = q.reshape(B * G, gs, dh)
+
+    kernel = functools.partial(_paged_decode_kernel, t_blocks=T, block_s=bs,
+                               scale=1.0 / math.sqrt(dh))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, G, T),
+        in_specs=[
+            pl.BlockSpec((1, gs, dh),
+                         lambda b, g, t, lens, tbl: (b * G + g, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dh),
+                         lambda b, g, t, lens, tbl: (tbl[b, t], 0, g, 0)),
+            pl.BlockSpec((1, bs, 1, dh),
+                         lambda b, g, t, lens, tbl: (tbl[b, t], 0, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, gs, dh),
+                               lambda b, g, t, lens, tbl: (b * G + g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((gs, 1), jnp.float32),
+            pltpu.VMEM((gs, 1), jnp.float32),
+            pltpu.VMEM((gs, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * G, gs, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, block_tables, qg, k_pages, v_pages)
+    return out.reshape(B, H, dh)
+
+
 def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                             lengths: jax.Array, *, block_s: int = 512,
                             interpret: bool = True) -> jax.Array:

@@ -13,9 +13,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.decode_attention import \
-    decode_attention_pallas
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_pallas, paged_decode_attention_pallas)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref, gather_kv_pages)
 
 LANE = 128
 VMEM_BUDGET = 32 * 2 ** 20
@@ -47,3 +48,28 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     bs = plan_block_s(S, dh, H // G, k.dtype.itemsize)
     return decode_attention_pallas(q, k, v, lengths, block_s=bs,
                                    interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array, *, use_pallas: bool = True,
+                           interpret: bool = True) -> jax.Array:
+    """Paged decode attention over a shared block pool.
+
+    q: (B,H,dh); k_pages,v_pages: (N,bs,G,dh); block_tables: (B,T);
+    lengths: (B,) -> (B,H,dh).  The pallas path streams KV tiles straight
+    from the pool through the block-table indirection (no contiguous copy);
+    the fallback gathers the per-request view and reuses the dense oracle.
+    """
+    B, H, dh = q.shape
+    bs, G = k_pages.shape[1], k_pages.shape[2]
+    if (not use_pallas) or H % G or bs % LANE or dh % LANE:
+        gs = max(H // G, 1)
+        ke = jnp.repeat(gather_kv_pages(k_pages, block_tables), gs,
+                        axis=2)[:, :, :H]
+        ve = jnp.repeat(gather_kv_pages(v_pages, block_tables), gs,
+                        axis=2)[:, :, :H]
+        return decode_attention_ref(q, ke, ve, lengths)
+    return paged_decode_attention_pallas(q, k_pages, v_pages, block_tables,
+                                         lengths, interpret=interpret)

@@ -7,6 +7,33 @@ import jax
 import jax.numpy as jnp
 
 
+def gather_kv_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Materialize the contiguous per-request view of a paged KV pool.
+
+    pages: (N, bs, G, dh) shared block pool; block_tables: (B, T) physical
+    block id per logical block (entries past the used length point at the
+    reserved null block 0 and are masked by ``lengths`` downstream).
+    Returns (B, T*bs, G, dh).
+    """
+    B, T = block_tables.shape
+    bs = pages.shape[1]
+    g = pages[block_tables]                       # (B, T, bs, G, dh)
+    return g.reshape(B, T * bs, *pages.shape[2:])
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_tables: jax.Array,
+                               lengths: jax.Array) -> jax.Array:
+    """Oracle paged decode attention: gather blocks, run the dense oracle.
+
+    q: (B,H,dh); k_pages,v_pages: (N,bs,H,dh) (head count already expanded
+    to H like ``decode_attention_ref``); block_tables: (B,T); lengths: (B,).
+    """
+    k = gather_kv_pages(k_pages, block_tables)
+    v = gather_kv_pages(v_pages, block_tables)
+    return decode_attention_ref(q, k, v, lengths)
+
+
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                          lengths: jax.Array) -> jax.Array:
     """q: (B,H,dh); k,v: (B,S,H,dh); lengths: (B,) valid cache length.

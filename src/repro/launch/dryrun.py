@@ -175,7 +175,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    ca = compiled.cost_analysis() or {}
+    ca = hlo_cost.xla_cost_analysis(compiled)
     ma = compiled.memory_analysis()
     txt = compiled.as_text()
     n_dev = 1

@@ -3,11 +3,15 @@
 CLI (CPU-feasible defaults):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm --reduced \
       --requests 8 --max-new 16
+
+Paged-KV knobs: ``--block-size`` (tokens per KV block), ``--num-blocks``
+(pool size incl. the reserved null block; 0 = dense-equivalent capacity),
+``--min-bucket`` (smallest power-of-two prefill bucket), ``--dense``
+(force the contiguous per-slot cache).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -30,6 +34,15 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--dense", action="store_true",
+                    help="force the dense per-slot KV cache")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="tokens per KV block (0 = min(128, max_seq))")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="KV pool size incl. null block "
+                         "(0 = dense-equivalent capacity)")
+    ap.add_argument("--min-bucket", type=int, default=16,
+                    help="smallest power-of-two prefill bucket")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -41,7 +54,11 @@ def main():
     model = build_model(cfg, plan)
     params, _ = model.init(jax.random.PRNGKey(0))
     engine = LPUEngine(model, params, slots=args.slots,
-                       max_seq=args.max_seq)
+                       max_seq=args.max_seq,
+                       paged=False if args.dense else None,
+                       block_size=args.block_size,
+                       num_blocks=args.num_blocks,
+                       min_bucket=args.min_bucket)
 
     rng = np.random.RandomState(0)
     prompts = [list(rng.randint(1, cfg.vocab_size,
@@ -55,9 +72,14 @@ def main():
     outs = engine.generate(prompts, max_new_tokens=args.max_new,
                            params=sp, stream_cb=cb)
     st = engine.stats
+    mode = "paged" if engine.paged else "dense"
     print(f"[serve] {len(outs)} requests, {st.tokens} tokens, "
           f"{st.tokens_per_s:.1f} tok/s, occupancy {st.occupancy:.2f}, "
           f"{st.steps} decode steps")
+    print(f"[serve] kv={mode} bytes={engine.kv_cache_bytes()} "
+          f"(dense-equiv {engine.dense_equiv_bytes()}), "
+          f"prefill traces={st.prefill_traces}, "
+          f"preemptions={st.preemptions}")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o[:12]}")
 

@@ -260,7 +260,8 @@ def prefill_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
 
 
 def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
-                     cache: Dict[str, jax.Array], positions: jax.Array
+                     cache: Dict[str, jax.Array], positions: jax.Array,
+                     block_table: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token generation step against the KV cache.
 
@@ -268,6 +269,11 @@ def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
     cache['k'/'v']: local (B, Smax[/kvseq], kpr, dh); cache['len'] == positions
     handled by the caller (engine).  This is the LPU's target regime: one
     activation vector against streamed weights + streamed KV.
+
+    Paged mode (``block_table`` given): cache['k'/'v'] is the shared block
+    pool (N, bs, kpr, dh); the per-request contiguous view is gathered
+    through the (B, T) block table, masked by ``positions`` as usual (null
+    blocks past the valid length never contribute).
     """
     a = plan.attn
     q, k_new, v_new = qkv_proj(p, x, env, plan)
@@ -276,6 +282,12 @@ def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
         k_new = apply_rope(k_new, positions[:, None], cfg.rope_theta)
 
     kc, vc = cache["k"], cache["v"]
+    if block_table is not None:
+        assert env.kv_seq_axis is None, "paged KV is single-rank"
+        B, T = block_table.shape
+        bs = kc.shape[1]
+        kc = kc[block_table].reshape(B, T * bs, kc.shape[2], kc.shape[3])
+        vc = vc[block_table].reshape(B, T * bs, vc.shape[2], vc.shape[3])
     if env.kv_seq_axis is None:
         # read the cache pre-update; the new token folds into the online
         # softmax and the caller scatters (k_new, v_new) into the scan
@@ -505,17 +517,30 @@ def _seq_sharded_decode(q, kc, vc, k_new, v_new, positions, plan,
 
 
 def init_cache(plan, batch: int, max_seq: int, dtype=jnp.bfloat16,
-               abstract: bool = False, kv_seq_width: int = 1):
+               abstract: bool = False, kv_seq_width: int = 1,
+               paged: bool = False, num_blocks: int = 0,
+               block_size: int = 0):
     """Per-layer KV cache in the stored (local-head) layout.
 
-    Global logical shape (B, max_seq, Gp, dh); under kv-seq sharding the
-    stored seq dim is max_seq/width per rank (global held as rank-major).
+    Dense: global logical shape (B, max_seq, Gp, dh); under kv-seq
+    sharding the stored seq dim is max_seq/width per rank (global held
+    as rank-major).
+
+    Paged (``paged=True``): a shared pool (num_blocks, block_size, Gp,
+    dh) with **no batch dimension** — requests own disjoint block sets
+    via block tables (block 0 reserved as the null block).  Memory
+    scales with resident tokens, not slots x worst-case length.
     """
     a = plan.attn
-    s = max_seq // kv_seq_width
     gp = a.gp
-    shape = (batch, max_seq, gp, a.d_head) if kv_seq_width == 1 else \
-        (batch, kv_seq_width, s, gp, a.d_head)
+    if paged:
+        assert kv_seq_width == 1, "paged cache is single-rank (no kv-seq)"
+        assert num_blocks >= 2 and block_size > 0, (num_blocks, block_size)
+        shape = (num_blocks, block_size, gp, a.d_head)
+    else:
+        s = max_seq // kv_seq_width
+        shape = (batch, max_seq, gp, a.d_head) if kv_seq_width == 1 else \
+            (batch, kv_seq_width, s, gp, a.d_head)
     if abstract:
         return {"k": jax.ShapeDtypeStruct(shape, dtype),
                 "v": jax.ShapeDtypeStruct(shape, dtype)}

@@ -53,7 +53,7 @@ class Model:
 
     def forward(self, params: Params, tokens: jax.Array, *, env: AxisEnv,
                 mode: str, positions=None, cache=None, frames=None,
-                patch_embeds=None, gather_fn=None):
+                patch_embeds=None, block_tables=None, gather_fn=None):
         if self.cfg.family == "encdec":
             return wh.forward_encdec(
                 params, tokens, cfg=self.cfg, plan=self.plan, env=env,
@@ -62,17 +62,30 @@ class Model:
         return tf.forward(
             params, tokens, cfg=self.cfg, plan=self.plan, env=env, mode=mode,
             positions=positions, cache=cache, patch_embeds=patch_embeds,
-            gather_fn=gather_fn)
+            block_tables=block_tables, gather_fn=gather_fn)
 
     # ---- decode cache -----------------------------------------------------
 
+    def supports_paged_kv(self) -> bool:
+        """Paged KV needs every layer to be attention (pure transformer):
+        recurrent states (mamba/rwkv) are per-slot, not per-token."""
+        cfg = self.cfg
+        if cfg.family in ("rwkv", "encdec"):
+            return False
+        sb = tf.super_block_size(cfg)
+        return all(cfg.is_attention_layer(j) for j in range(sb))
+
     def init_cache(self, batch: int, max_seq: int, *,
-                   abstract: bool = False, dtype=None):
+                   abstract: bool = False, dtype=None, paged: bool = False,
+                   num_blocks: int = 0, block_size: int = 0):
         cfg, plan = self.cfg, self.plan
         dtype = dtype or jnp.dtype(plan.cache_dtype)
         if cfg.family == "encdec":
             return wh.init_encdec_cache(cfg, plan, batch, max_seq,
                                         dtype=dtype, abstract=abstract)
+        if paged:
+            assert self.supports_paged_kv(), \
+                f"{cfg.name}: paged KV needs an attention-only stack"
         n_sb = tf.n_super_blocks(cfg)
         sb = tf.super_block_size(cfg)
 
@@ -93,7 +106,9 @@ class Model:
                                              abstract=True, dtype=dtype)
             elif cfg.is_attention_layer(j):
                 c = attn_mod.init_cache(plan, batch, max_seq, dtype=dtype,
-                                        abstract=True, kv_seq_width=kv_w)
+                                        abstract=True, kv_seq_width=kv_w,
+                                        paged=paged, num_blocks=num_blocks,
+                                        block_size=block_size)
             else:
                 c = mamba_mod.init_mamba_state(cfg, plan, batch,
                                                abstract=True, dtype=dtype)

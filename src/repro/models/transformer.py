@@ -219,7 +219,8 @@ def _norm(pn, x, cfg, plan, env):
 
 def apply_layer(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                 layer_idx: int, positions: jax.Array, mode: str,
-                cache: Optional[Params] = None
+                cache: Optional[Params] = None,
+                block_tables: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.float32(0.0)
@@ -248,7 +249,8 @@ def apply_layer(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
         if mode == "decode":
             h, kv = attn_mod.decode_attention(
                 p["attn"], h_in, cfg=cfg, plan=plan, env=env,
-                cache=cache, positions=positions)
+                cache=cache, positions=positions,
+                block_table=block_tables)
             new_cache = kv
         elif mode == "prefill":
             h, kv = attn_mod.prefill_attention(
@@ -278,7 +280,8 @@ def apply_layer(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
 
 def apply_super_block(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                       positions: jax.Array, mode: str,
-                      cache: Optional[Params] = None):
+                      cache: Optional[Params] = None,
+                      block_tables: Optional[jax.Array] = None):
     sb = super_block_size(cfg)
     aux_total = jnp.float32(0.0)
     new_cache: Dict[str, Any] = {}
@@ -286,14 +289,16 @@ def apply_super_block(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
         cj = cache.get(f"l{j}") if cache is not None else None
         x, cj2, aux = apply_layer(p[f"l{j}"], x, cfg=cfg, plan=plan, env=env,
                                   layer_idx=j, positions=positions,
-                                  mode=mode, cache=cj)
+                                  mode=mode, cache=cj,
+                                  block_tables=block_tables)
         if cache is not None:
             new_cache[f"l{j}"] = cj2
         aux_total = aux_total + aux
     return x, (new_cache if cache is not None else None), aux_total
 
 
-def _scatter_cache_updates(cache_st, upd, idx, seq_sharded: bool):
+def _scatter_cache_updates(cache_st, upd, idx, seq_sharded: bool,
+                           block_tables=None):
     """Scatter per-layer decode updates into the stacked cache carry."""
     out = {}
     for lj, u in upd.items():
@@ -305,7 +310,20 @@ def _scatter_cache_updates(cache_st, upd, idx, seq_sharded: bool):
             knew, vnew = u["k_new"], u["v_new"]
             pos, mask = u["pos"], u["mask"]
             b_idx = jnp.arange(knew.shape[0])
-            if seq_sharded and c["k"].ndim == 6:
+            if block_tables is not None:
+                # paged pool (n_sb, N, bs, gp, dh): the token at logical
+                # position ``pos`` lands in physical block
+                # table[b, pos // bs] at offset pos % bs.  Inactive slots
+                # point at the null block 0 (don't-care writes).
+                bs_blk = c["k"].shape[2]
+                blk = jnp.take_along_axis(
+                    block_tables, (pos // bs_blk)[:, None], axis=1)[:, 0]
+                off = pos % bs_blk
+                out[lj] = {
+                    "k": c["k"].at[idx, blk, off].set(knew[:, 0]),
+                    "v": c["v"].at[idx, blk, off].set(vnew[:, 0]),
+                }
+            elif seq_sharded and c["k"].ndim == 6:
                 old_k = c["k"][idx, b_idx, 0, pos]
                 old_v = c["v"][idx, b_idx, 0, pos]
                 val_k = jnp.where(mask[:, None, None], knew[:, 0], old_k)
@@ -336,6 +354,7 @@ def forward(params: Params, tokens: jax.Array, *, cfg, plan, env: AxisEnv,
             positions: Optional[jax.Array] = None,
             cache: Optional[Params] = None,
             patch_embeds: Optional[jax.Array] = None,
+            block_tables: Optional[jax.Array] = None,
             gather_fn=None):
     """Shared forward.  ``gather_fn(subtree_path, subtree)`` applies FSDP
     gathering (injected by the step builder; identity in smoke mode).
@@ -405,9 +424,9 @@ def forward(params: Params, tokens: jax.Array, *, cfg, plan, env: AxisEnv,
                 cache_st)
             xc, upd, aux = apply_super_block(
                 bp, xc, cfg=cfg, plan=plan, env=env, positions=positions,
-                mode=mode, cache=sl)
+                mode=mode, cache=sl, block_tables=block_tables)
             cache_st = _scatter_cache_updates(cache_st, upd, idx,
-                                              seq_sharded)
+                                              seq_sharded, block_tables)
             return (xc, auxc + aux, cache_st), None
 
         (x, aux_total, new_cache), _ = lax.scan(

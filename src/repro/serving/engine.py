@@ -1,29 +1,53 @@
-"""HyperDex-style runtime layer: HuggingFace-like generation engine.
+"""HyperDex-style runtime layer: continuous-batching serving engine.
 
-``LPUEngine`` mirrors the paper's runtime API surface
-(AutoModelForCausalLM-ish): ``generate(prompts, max_new_tokens,
-temperature/top_k/top_p, stream_cb)``.  Below the API sits the
-slot-based **continuous batching** scheduler (the paper's "batch mode"
-future work, implemented here): a fixed decode batch of B slots; new
-requests claim free slots at step boundaries, finished sequences
-release them mid-flight.  Per-request sampling params are carried per
-slot (the paper's per-request control registers).
+``LPUEngine`` mirrors the paper's runtime API surface on top and a paged
+KV-cache serving stack below:
 
-Monitoring hooks expose tokens/s, slot occupancy and step latency —
-the datacenter-level statistics HyperDex exposes from its driver.
+* **API** — the HF-like blocking ``generate(prompts, ...)`` plus a
+  non-blocking ``submit(request) / step() / drain()`` interface for
+  continuous serving (the paper's "batch mode" datacenter direction).
+* **Scheduler** — a fixed decode batch of B slots; queued requests are
+  admitted at step boundaries by :class:`repro.serving.scheduler.
+  Scheduler`, finished sequences release their slot (and blocks)
+  mid-flight.
+* **KV cache** — paged by default for attention-only stacks: a shared
+  pool of fixed-size blocks with per-request block tables
+  (:mod:`repro.serving.kv_cache`), so the *persistent* cache scales
+  with resident tokens instead of slots x max_seq.  (The jnp decode
+  path still gathers a contiguous per-request view each step; the
+  gather-free variant is the paged pallas kernel in
+  ``kernels/decode_attention``, not yet wired into the model path.)
+  The dense per-slot cache remains the contiguous fast path
+  (``paged=False``, and the automatic fallback for recurrent-state
+  families).
+* **Prefill** — per-request at batch 1, padded to power-of-two length
+  buckets so the prefill jit traces O(log2 max_seq) times instead of
+  once per distinct prompt length; the resulting KV is scattered into
+  the pool (or the slot's dense region).
+* **Preemption** — when the pool is exhausted, the newest sequence is
+  evicted and re-prefiled later (recompute), protecting old requests.
+
+Monitoring hooks expose tokens/s, slot occupancy, prefill trace count,
+preemptions and KV bytes — the datacenter-level statistics HyperDex
+exposes from its driver.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Set, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core.dist import make_axis_env
-from repro.serving.sampler import SamplingParams, sample_sharded
+from repro.serving.kv_cache import (LANE, BlockPool, cache_bytes,
+                                    scatter_prefill_dense,
+                                    scatter_prefill_pages)
+from repro.serving.sampler import SamplingParams, sample_local
+from repro.serving.scheduler import Scheduler, SeqSlot
 
 StreamCB = Callable[[int, int], None]   # (request_id, token)
 
@@ -38,6 +62,17 @@ class Request:
     done: bool = False
     stream_cb: Optional[StreamCB] = None
 
+    def resume_tokens(self) -> List[int]:
+        """Tokens whose KV must be resident before decoding continues.
+
+        Fresh request: the prompt.  After preemption the generated tokens
+        ride along — all but the last (which has been sampled, not yet
+        fed through the model) are re-prefiled.
+        """
+        if not self.out:
+            return list(self.prompt)
+        return list(self.prompt) + list(self.out[:-1])
+
 
 @dataclass
 class EngineStats:
@@ -46,6 +81,9 @@ class EngineStats:
     busy_slot_steps: int = 0
     slot_steps: int = 0
     wall: float = 0.0
+    preemptions: int = 0
+    prefill_traces: int = 0       # distinct prefill buckets traced
+    prefills: int = 0             # total prefill launches (incl. resume)
 
     @property
     def tokens_per_s(self) -> float:
@@ -61,7 +99,9 @@ class LPUEngine:
 
     def __init__(self, model, params, *, slots: int = 4,
                  max_seq: int = 256, eos_id: Optional[int] = None,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None,
+                 paged: Optional[bool] = None, block_size: int = 0,
+                 num_blocks: int = 0, min_bucket: int = 16):
         self.model = model
         self.cfg = model.cfg
         self.plan = model.plan
@@ -70,94 +110,249 @@ class LPUEngine:
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.env = make_axis_env(self.plan, batch=slots)
+        self.env1 = make_axis_env(self.plan, batch=1)
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
-        self.cache = model.init_cache(slots, max_seq)
-        self.positions = np.zeros((slots,), np.int32)
-        self.active: List[Optional[Request]] = [None] * slots
-        self.last_token = np.zeros((slots,), np.int32)
+
+        if paged is None:
+            paged = model.supports_paged_kv()
+        self.paged = paged
+        # pow2 prefill buckets pad the prompt with token 0; attention
+        # masks padded KV by valid length, but recurrent state (mamba /
+        # rwkv) folds every position in — those families prefill at the
+        # exact prompt length (one trace per distinct length, as before)
+        self.bucketed = model.supports_paged_kv()
+        if paged:
+            self.block_size = block_size or min(LANE, max_seq)
+            assert max_seq % self.block_size == 0, \
+                (max_seq, self.block_size)
+            self.table_len = max_seq // self.block_size
+            # default pool: dense-equivalent capacity + the null block
+            self.num_blocks = num_blocks or (slots * self.table_len + 1)
+            pool = BlockPool(self.num_blocks, self.block_size)
+            self.cache = model.init_cache(
+                slots, max_seq, paged=True, num_blocks=self.num_blocks,
+                block_size=self.block_size)
+            self.block_tables = np.zeros((slots, self.table_len), np.int32)
+        else:
+            self.block_size = max_seq
+            self.table_len = 1
+            self.num_blocks = slots
+            pool = None
+            self.cache = model.init_cache(slots, max_seq)
+            self.block_tables = None
+        self.sched = Scheduler(slots, max_seq, pool, min_bucket)
         self.stats = EngineStats()
-        self._decode = jax.jit(self._decode_fn, static_argnums=(5, 6, 7))
-        self._prefill = jax.jit(self._prefill_fn, static_argnums=(3,))
+        self._results: Dict[int, List[int]] = {}
+        self._rid = 0
+        self._buckets_traced: Set[int] = set()
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn)
+        self._write_pages = jax.jit(scatter_prefill_pages)
+        self._write_dense = jax.jit(scatter_prefill_dense)
 
     # -- jitted steps --------------------------------------------------
 
-    def _decode_fn(self, params, cache, tokens, positions, rng, temp, topk,
-                   topp):
+    def _decode_fn(self, params, cache, tokens, positions, tables):
         logits, new_cache, _ = self.model.forward(
             params, tokens, env=self.env, mode="decode",
-            positions=positions, cache=cache)
-        sp = SamplingParams(temp, topk, topp)
-        nxt = sample_sharded(logits[:, -1], rng, sp, None, 1)
-        return nxt, logits[:, -1], new_cache
+            positions=positions, cache=cache, block_tables=tables)
+        return logits[:, -1], new_cache
 
-    def _prefill_fn(self, params, cache, tokens, true_len):
-        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]),
-                                     tokens.shape)
+    def _prefill_fn(self, params, tokens, true_len):
+        """Batch-1 prefill of a bucket-padded prompt.
+
+        Traced once per bucket size (``tokens.shape[1]``); ``true_len``
+        is dynamic so distinct prompt lengths inside one bucket share
+        the trace.  Returns (last-valid-token logits row, filled cache).
+        """
+        B, S = tokens.shape
+        cache = self.model.init_cache(1, S)
+        positions = jnp.broadcast_to(jnp.arange(S), (1, S))
         logits, new_cache, _ = self.model.forward(
-            params, tokens, env=self.env, mode="prefill", cache=cache,
+            params, tokens, env=self.env1, mode="prefill", cache=cache,
             positions=positions)
-        return logits[:, true_len - 1], new_cache
+        row = lax.dynamic_index_in_dim(logits[0], true_len - 1, 0,
+                                       keepdims=False)
+        return row, new_cache
 
-    # -- scheduling ------------------------------------------------------
+    # -- sampling ------------------------------------------------------
 
-    def _admit(self, queue: List[Request]):
-        for s in range(self.slots):
-            if self.active[s] is None and queue:
-                req = queue.pop(0)
-                ptoks = np.asarray(req.prompt, np.int32)[None]
-                # prefill this slot (batch=slots: pad others, cheap here)
-                full = np.zeros((self.slots, ptoks.shape[1]), np.int32)
-                full[s] = ptoks
-                logits, cache = self._prefill(self.params, self.cache,
-                                              jnp.asarray(full),
-                                              int(ptoks.shape[1]))
-                self.cache = cache
-                self.active[s] = req
-                self.positions[s] = len(req.prompt)
-                lg = np.asarray(logits[s])
-                self.last_token[s] = int(lg.argmax())
-                req.out.append(int(self.last_token[s]))
-                if req.stream_cb:
-                    req.stream_cb(req.rid, int(self.last_token[s]))
+    def _sample(self, logits_np: np.ndarray, logits_dev,
+                params: SamplingParams) -> int:
+        if params.temperature <= 0.0:
+            return int(np.argmax(logits_np))
+        self.rng, sub = jax.random.split(self.rng)
+        return int(sample_local(logits_dev[None], sub, params)[0])
+
+    # -- prefill + admission -------------------------------------------
+
+    def _refresh_tables(self) -> None:
+        if not self.paged:
+            return
+        self.block_tables[:] = 0
+        for slot, seq in enumerate(self.sched.active):
+            if seq is not None and seq.blocks:
+                self.block_tables[slot, :len(seq.blocks)] = seq.blocks
+
+    def _should_finish(self, seq: SeqSlot, tok: int) -> bool:
+        req = seq.req
+        return (len(req.out) >= req.max_new_tokens
+                or (self.eos_id is not None and tok == self.eos_id)
+                or seq.pos >= self.max_seq - 1)
+
+    def _finish(self, seq: SeqSlot) -> Request:
+        req = seq.req
+        req.done = True
+        self._results[req.rid] = req.out
+        self.sched.release(seq)
+        return req
+
+    def _do_prefill(self, seq: SeqSlot) -> Optional[Request]:
+        """Run bucketed prefill for a just-admitted sequence; returns the
+        request if it finished immediately (eos / max_new_tokens == 1)."""
+        req = seq.req
+        tokens = req.resume_tokens()
+        bucket = (self.sched.bucket(len(tokens)) if self.bucketed
+                  else len(tokens))
+        buf = np.zeros((1, bucket), np.int32)
+        buf[0, :len(tokens)] = tokens
+        row, pc = self._prefill(self.params, jnp.asarray(buf),
+                                jnp.int32(len(tokens)))
+        self._buckets_traced.add(bucket)
+        self.stats.prefills += 1
+        slot = self.sched.slot_of(seq)
+        if self.paged:
+            table = np.zeros((bucket // self.block_size,), np.int32)
+            table[:len(seq.blocks)] = seq.blocks
+            self.cache = self._write_pages(self.cache, pc,
+                                           jnp.asarray(table))
+        else:
+            self.cache = self._write_dense(self.cache, pc, jnp.int32(slot))
+        if seq.resumed:
+            seq.last_token = req.out[-1]
+            return None
+        row_np = np.asarray(row)
+        tok = self._sample(row_np, row, req.params)
+        req.out.append(tok)
+        seq.last_token = tok
+        if req.stream_cb:
+            req.stream_cb(req.rid, tok)
+        if self._should_finish(seq, tok):
+            return self._finish(seq)
+        return None
+
+    # -- public API ----------------------------------------------------
+
+    def submit(self, prompt: Union[Request, Sequence[int]],
+               max_new_tokens: int = 32,
+               params: Optional[SamplingParams] = None,
+               stream_cb: Optional[StreamCB] = None) -> int:
+        """Enqueue a request (non-blocking).  Returns its request id."""
+        if isinstance(prompt, Request):
+            req = prompt
+        else:
+            req = Request(self._rid, list(prompt), max_new_tokens,
+                          params or SamplingParams(0.0, 0, 1.0),
+                          stream_cb=stream_cb)
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} >= max_seq "
+                f"{self.max_seq}: no room to decode")
+        self._rid = max(self._rid, req.rid) + 1
+        self.sched.submit(req)
+        return req.rid
+
+    def step(self) -> List[Request]:
+        """One scheduler round: admit + prefill, then one decode step for
+        the whole slot batch.  Returns requests finished this round."""
+        t0 = time.time()
+        try:
+            return self._step()
+        finally:
+            self.stats.wall += time.time() - t0
+
+    def _step(self) -> List[Request]:
+        finished: List[Request] = []
+        while True:
+            seq = self.sched.admit_next()
+            if seq is None:
+                break
+            done = self._do_prefill(seq)
+            if done is not None:
+                finished.append(done)
+        self.sched.ensure_decode_capacity()     # may preempt (recompute)
+        self.stats.preemptions = self.sched.preemptions
+        if self.sched.num_active() == 0:
+            return finished
+        self._refresh_tables()
+
+        toks = np.zeros((self.slots, 1), np.int32)
+        pos = np.zeros((self.slots,), np.int32)
+        for slot, seq in enumerate(self.sched.active):
+            if seq is not None:
+                toks[slot, 0] = seq.last_token
+                pos[slot] = seq.pos
+        tables = (jnp.asarray(self.block_tables) if self.paged else None)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            tables)
+        logits_np = np.asarray(logits)
+
+        self.stats.steps += 1
+        self.stats.slot_steps += self.slots
+        for slot, seq in enumerate(self.sched.active):
+            if seq is None:
+                continue
+            req = seq.req
+            self.stats.busy_slot_steps += 1
+            self.stats.tokens += 1
+            tok = self._sample(logits_np[slot], logits[slot], req.params)
+            req.out.append(tok)
+            seq.pos += 1
+            seq.last_token = tok
+            if req.stream_cb:
+                req.stream_cb(req.rid, tok)
+            if self._should_finish(seq, tok):
+                finished.append(self._finish(seq))
+        self.stats.prefill_traces = len(self._buckets_traced)
+        return finished
+
+    def drain(self) -> Dict[int, List[int]]:
+        """Step until the queue and all slots are empty; returns
+        {rid: generated tokens} finished since the last drain.
+
+        Results are handed off exactly once (the buffer is cleared), so a
+        long-running submit/step/drain server does not accumulate every
+        request it ever served.
+        """
+        while self.sched.has_work():
+            self.step()
+        self.stats.prefill_traces = len(self._buckets_traced)
+        out, self._results = self._results, {}
+        return out
 
     def generate(self, prompts: Sequence[Sequence[int]],
                  max_new_tokens: int = 32,
                  params: Optional[SamplingParams] = None,
                  stream_cb: Optional[StreamCB] = None) -> List[List[int]]:
         """HF-like entry point: batch of prompts -> generated ids."""
-        params = params or SamplingParams(0.0, 0, 1.0)   # greedy default
-        queue = [Request(i, list(p), max_new_tokens, params,
-                         stream_cb=stream_cb)
-                 for i, p in enumerate(prompts)]
-        results: Dict[int, List[int]] = {}
-        t0 = time.time()
-        while queue or any(a is not None for a in self.active):
-            self._admit(queue)
-            toks = jnp.asarray(self.last_token[:, None])
-            pos = jnp.asarray(self.positions)
-            self.rng, sub = jax.random.split(self.rng)
-            nxt, logits, self.cache = self._decode(
-                self.params, self.cache, toks, pos, sub,
-                params.temperature, params.top_k, params.top_p)
-            nxt = np.asarray(nxt)
-            self.stats.steps += 1
-            self.stats.slot_steps += self.slots
-            for s, req in enumerate(self.active):
-                if req is None:
-                    continue
-                self.stats.busy_slot_steps += 1
-                self.stats.tokens += 1
-                tok = int(nxt[s])
-                req.out.append(tok)
-                self.positions[s] += 1
-                self.last_token[s] = tok
-                if req.stream_cb:
-                    req.stream_cb(req.rid, tok)
-                if (len(req.out) >= req.max_new_tokens
-                        or (self.eos_id is not None and tok == self.eos_id)
-                        or self.positions[s] >= self.max_seq - 1):
-                    req.done = True
-                    results[req.rid] = req.out
-                    self.active[s] = None     # release slot mid-flight
-        self.stats.wall = time.time() - t0
-        return [results[i] for i in sorted(results)]
+        rids = [self.submit(list(p), max_new_tokens, params,
+                            stream_cb=stream_cb) for p in prompts]
+        results = self.drain()
+        return [results[r] for r in rids]
+
+    # -- monitoring ----------------------------------------------------
+
+    def kv_cache_bytes(self) -> int:
+        """Bytes held by the KV cache (block pool or dense slot cache)."""
+        return cache_bytes(self.cache)
+
+    def dense_equiv_bytes(self) -> int:
+        """Bytes a dense (slots, max_seq) cache of this model would take."""
+        if not self.paged:
+            return self.kv_cache_bytes()
+        per_tok = self.kv_cache_bytes() // (self.num_blocks
+                                            * self.block_size)
+        return per_tok * self.slots * self.max_seq

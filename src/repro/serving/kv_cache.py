@@ -1,0 +1,158 @@
+"""Paged KV-cache: a shared pool of fixed-size blocks + per-request tables.
+
+The dense engine allocated a ``(slots, max_seq)`` KV cache per layer, so
+HBM scales with the *worst-case* sequence length times the slot count —
+the paper's "batch mode" datacenter scenario (many users, short typical
+prompts) wastes most of it.  Here KV lives in a pool of LANE-aligned
+fixed-size blocks; each request owns only the blocks its tokens actually
+fill, tracked by a block table (logical block -> physical block id).
+
+Block id 0 is reserved as the **null block**: table entries past a
+request's used length point at it, padded prefill tokens are written to
+it, and inactive decode slots scatter into it — reads are masked by the
+valid-length anyway, so it absorbs all don't-care traffic without
+branching inside jit.
+
+Device-side helpers (:func:`scatter_prefill_pages`,
+:func:`scatter_prefill_dense`) copy a freshly prefiled batch=1 cache into
+the shared pool / the dense slot cache; the engine jits them per bucket.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# host-side accounting
+# ---------------------------------------------------------------------------
+
+def bucket_for(n: int, max_seq: int, min_bucket: int = 16) -> int:
+    """Pad a prompt length to its power-of-two prefill bucket.
+
+    The prefill jit re-traces per *shape*, so padding to pow2 buckets
+    bounds the trace count by O(log2 max_seq) instead of one per
+    distinct prompt length.
+    """
+    if n > max_seq:
+        raise ValueError(f"prompt length {n} exceeds max_seq {max_seq}")
+    b = max(min_bucket, 1)
+    while b < n:
+        b *= 2
+    return min(b, max_seq)
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Number of KV blocks needed to hold ``n_tokens``."""
+    return max(1, math.ceil(n_tokens / block_size))
+
+
+class BlockPool:
+    """Free-list allocator over the shared block pool.
+
+    Block 0 is reserved (null block) and never handed out.  ``alloc``
+    returns None when the request cannot be satisfied — the scheduler
+    turns that into queueing or preemption, never a partial grant.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("pool needs >= 2 blocks (one is the null block)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if not 0 < b < self.num_blocks:
+                raise ValueError(f"bad block id {b}")
+            if b in self._free:
+                raise ValueError(f"double free of block {b}")
+            self._free.append(b)
+
+    def used_bytes(self, bytes_per_block: int) -> int:
+        return self.num_used * bytes_per_block
+
+
+# ---------------------------------------------------------------------------
+# device-side pool plumbing (pure functions; the engine jits them)
+# ---------------------------------------------------------------------------
+
+def cache_bytes(cache: Params) -> int:
+    """Total bytes of a KV cache pytree (dense slot cache or block pool)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def scatter_prefill_pages(cache: Params, prefill_cache: Params,
+                          table: jax.Array) -> Params:
+    """Copy a batch=1 prefill cache into the shared block pool.
+
+    cache:         {lj: {"k": (n_sb, N, bs, gp, dh), "v": ...}}
+    prefill_cache: {lj: {"k": (n_sb, 1, S, gp, dh), "v": ...}} with S a
+                   multiple of bs
+    table:         (S // bs,) physical block ids; pad entries point at the
+                   null block 0, which absorbs the padded tokens' KV.
+    """
+    out: Params = {}
+    for lj, c in cache.items():
+        pc = prefill_cache[lj]
+        layer: Params = {}
+        for key in ("k", "v"):
+            pg, dn = c[key], pc[key]
+            n_sb, _, bs = pg.shape[0], pg.shape[1], pg.shape[2]
+            S = dn.shape[2]
+            nb = S // bs
+            chunks = dn[:, 0].reshape((n_sb, nb, bs) + dn.shape[3:])
+            layer[key] = pg.at[:, table].set(chunks.astype(pg.dtype))
+        out[lj] = layer
+    return out
+
+
+def scatter_prefill_dense(cache: Params, prefill_cache: Params,
+                          slot: jax.Array) -> Params:
+    """Copy a batch=1 prefill cache into one slot of the dense cache.
+
+    KV leaves ("k"/"v") scatter along the sequence prefix of the slot;
+    recurrent-state leaves (mamba conv/ssm, rwkv shift/wkv) replace the
+    slot's state wholesale.
+    """
+    out: Params = {}
+    for lj, c in cache.items():
+        pc = prefill_cache[lj]
+        layer: Params = {}
+        for key, tgt in c.items():
+            dn = pc[key]
+            if key in ("k", "v"):
+                layer[key] = jax.lax.dynamic_update_slice(
+                    tgt, dn.astype(tgt.dtype)[:, 0:1],
+                    (0, slot, 0) + (0,) * (tgt.ndim - 3))
+            else:
+                layer[key] = jax.lax.dynamic_update_slice(
+                    tgt, dn.astype(tgt.dtype)[:, 0:1],
+                    (0, slot) + (0,) * (tgt.ndim - 2))
+        out[lj] = layer
+    return out

@@ -1,0 +1,176 @@
+"""Request-level scheduler: admission, bucketed prefill, preemption.
+
+Sits between the engine's ``submit()`` queue and the fixed decode batch of
+``slots``.  Three policies live here, all host-side (no jax):
+
+* **Admission** — FIFO: a queued request is admitted when a slot is free
+  AND (paged mode) the block pool can cover its prompt.  Prompt lengths
+  are padded to power-of-two buckets (:func:`repro.serving.kv_cache.
+  bucket_for`) so the prefill jit traces O(log2 max_seq) times total.
+* **Growth** — before every decode step each active sequence must own the
+  block its next token lands in; blocks are allocated lazily one at a
+  time as sequences cross block boundaries.
+* **Preemption** — when growth cannot be satisfied, the most recently
+  admitted *other* sequence is evicted (recompute-style: its blocks are
+  freed, it re-enters the queue front, and its tokens so far are
+  re-prefiled on re-admission).  LIFO victim choice protects the oldest
+  requests' latency, mirroring vLLM's recompute preemption.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional
+
+from repro.serving.kv_cache import BlockPool, blocks_for, bucket_for
+
+
+@dataclass
+class SeqSlot:
+    """An active request's per-slot serving state."""
+    req: "object"                 # repro.serving.engine.Request
+    pos: int                      # tokens resident in KV cache
+    blocks: List[int] = field(default_factory=list)
+    admit_seq: int = 0            # admission order (monotonic)
+    resumed: bool = False         # re-admitted after preemption
+    last_token: int = 0           # sampled but not yet fed to the model
+
+
+class Scheduler:
+    """Slot + block-pool bookkeeping for the serving engine.
+
+    ``pool`` is None in dense mode: every slot owns an implicit
+    max_seq-sized region, capacity checks reduce to the max_seq bound and
+    preemption never triggers.
+    """
+
+    def __init__(self, slots: int, max_seq: int,
+                 pool: Optional[BlockPool] = None, min_bucket: int = 16):
+        self.slots = slots
+        self.max_seq = max_seq
+        self.pool = pool
+        self.min_bucket = min_bucket
+        if pool is not None:
+            self.min_bucket = max(min_bucket, pool.block_size)
+            assert max_seq % pool.block_size == 0, \
+                (max_seq, pool.block_size)
+        self.queue: Deque = deque()
+        self.active: List[Optional[SeqSlot]] = [None] * slots
+        self.preemptions = 0
+        self._admit_counter = 0
+
+    # -- queries ----------------------------------------------------------
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.active)
+
+    def num_active(self) -> int:
+        return sum(1 for s in self.active if s is not None)
+
+    def bucket(self, n_tokens: int) -> int:
+        return bucket_for(n_tokens, self.max_seq, self.min_bucket)
+
+    # -- admission --------------------------------------------------------
+
+    def submit(self, req) -> None:
+        if self.pool is not None:
+            need = blocks_for(len(req.prompt), self.pool.block_size)
+            if need > self.pool.num_blocks - 1:
+                raise ValueError(
+                    f"prompt needs {need} blocks but the pool only has "
+                    f"{self.pool.num_blocks - 1} allocatable blocks")
+        self.queue.append(req)
+
+    def admit_next(self) -> Optional[SeqSlot]:
+        """Admit the head of the queue if a slot and blocks are available.
+
+        Returns the newly filled SeqSlot (prefill is the engine's job) or
+        None when nothing can be admitted right now.
+        """
+        if not self.queue:
+            return None
+        free_slot = next((i for i, s in enumerate(self.active)
+                          if s is None), None)
+        if free_slot is None:
+            return None
+        req = self.queue[0]
+        n_tok = len(req.resume_tokens())
+        blocks: List[int] = []
+        if self.pool is not None:
+            got = self.pool.alloc(blocks_for(n_tok, self.pool.block_size))
+            if got is None:
+                if self.num_active() == 0 and \
+                        self.pool.num_used == 0:
+                    # whole pool free yet still short: this request can
+                    # never be admitted (its resume state outgrew the
+                    # pool after preemption) — fail loudly, don't livelock
+                    raise RuntimeError(
+                        f"request {getattr(req, 'rid', '?')} needs "
+                        f"{blocks_for(n_tok, self.pool.block_size)} blocks "
+                        f"but the pool holds only "
+                        f"{self.pool.num_blocks - 1}; increase num_blocks")
+                return None          # pool pressure: wait for finishes
+            blocks = got
+        self.queue.popleft()
+        seq = SeqSlot(req=req, pos=n_tok, blocks=blocks,
+                      admit_seq=self._admit_counter,
+                      resumed=bool(req.out))
+        self._admit_counter += 1
+        self.active[free_slot] = seq
+        return seq
+
+    def slot_of(self, seq: SeqSlot) -> int:
+        return self.active.index(seq)
+
+    # -- growth / preemption ----------------------------------------------
+
+    def ensure_decode_capacity(self) -> List[SeqSlot]:
+        """Guarantee every active sequence owns the block its next token
+        writes into, preempting the newest other sequences if the pool is
+        exhausted.  Returns the list of preempted SeqSlots (engine resets
+        their host decode state)."""
+        if self.pool is None:
+            return []
+        preempted: List[SeqSlot] = []
+        for i in range(self.slots):
+            seq = self.active[i]
+            if seq is None:
+                continue
+            need_blocks = blocks_for(seq.pos + 1, self.pool.block_size)
+            while len(seq.blocks) < need_blocks:
+                got = self.pool.alloc(1)
+                if got is not None:
+                    seq.blocks.extend(got)
+                    continue
+                victim = self._pick_victim(exclude=seq)
+                if victim is None:
+                    raise RuntimeError(
+                        "KV block pool exhausted by a single sequence; "
+                        "increase num_blocks or lower max_seq")
+                self._preempt(victim)
+                preempted.append(victim)
+        return preempted
+
+    def _pick_victim(self, exclude: SeqSlot) -> Optional[SeqSlot]:
+        cands = [s for s in self.active
+                 if s is not None and s is not exclude]
+        if not cands:
+            return None
+        return max(cands, key=lambda s: s.admit_seq)
+
+    def _preempt(self, seq: SeqSlot) -> None:
+        slot = self.slot_of(seq)
+        self.pool.free(seq.blocks)
+        seq.blocks = []
+        self.active[slot] = None
+        self.queue.appendleft(seq.req)
+        self.preemptions += 1
+
+    # -- release ----------------------------------------------------------
+
+    def release(self, seq: SeqSlot) -> None:
+        slot = self.slot_of(seq)
+        if self.pool is not None and seq.blocks:
+            self.pool.free(seq.blocks)
+        seq.blocks = []
+        self.active[slot] = None

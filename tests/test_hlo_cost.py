@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import pytest
 from jax import lax
 
-from repro.core.hlo_cost import module_cost
+from repro.core.hlo_cost import module_cost, xla_cost_analysis
 
 
 def _compile(f, *args):
@@ -21,7 +21,7 @@ def test_unrolled_matches_xla():
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     c = _compile(f, w, x)
     assert module_cost(c.as_text()).flops == \
-        pytest.approx(c.cost_analysis()["flops"], rel=1e-6)
+        pytest.approx(xla_cost_analysis(c)["flops"], rel=1e-6)
 
 
 def test_scan_trip_count_multiplied():
@@ -33,9 +33,11 @@ def test_scan_trip_count_multiplied():
     w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     c = _compile(f, w, x)
-    # XLA counts the body once; parser counts all 8 trips
+    # XLA counts the body once; parser counts all 8 trips.  XLA's count
+    # also includes a few scalar loop-counter flops per trip, so the
+    # comparison is approximate at the 1e-5 level.
     assert module_cost(c.as_text()).flops == \
-        pytest.approx(8 * c.cost_analysis()["flops"], rel=1e-6)
+        pytest.approx(8 * xla_cost_analysis(c)["flops"], rel=1e-5)
 
 
 def test_nested_scan():

@@ -69,3 +69,130 @@ def test_prompt_isolation(tiny_model):
     eng = LPUEngine(model, params, slots=1, max_seq=64)
     outs = eng.generate([[1, 2, 3], [1, 2, 3]], max_new_tokens=5)
     assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# continuous serving API: submit / step / drain
+# ---------------------------------------------------------------------------
+
+def test_submit_step_drain_nonblocking(tiny_model):
+    model, params = tiny_model
+    eng = LPUEngine(model, params, slots=2, max_seq=64)
+    r0 = eng.submit([1, 2, 3], max_new_tokens=4)
+    r1 = eng.submit([4, 5], max_new_tokens=6)
+    assert r0 != r1
+    # stepping by hand: nothing finishes before its token budget
+    finished = eng.step()
+    assert finished == []
+    # submit mid-flight (continuous serving)
+    r2 = eng.submit([6, 7, 8], max_new_tokens=2)
+    results = eng.drain()
+    assert set(results) == {r0, r1, r2}
+    assert len(results[r0]) == 4
+    assert len(results[r1]) == 6
+    assert len(results[r2]) == 2
+    # results are handed off exactly once (no unbounded history)
+    assert eng.drain() == {}
+
+
+def test_step_matches_generate(tiny_model):
+    """Hand-stepped serving produces the same tokens as generate()."""
+    model, params = tiny_model
+    ref = LPUEngine(model, params, slots=2, max_seq=64).generate(
+        [[1, 2, 3], [4, 5]], max_new_tokens=5)
+    eng = LPUEngine(model, params, slots=2, max_seq=64)
+    r0 = eng.submit([1, 2, 3], max_new_tokens=5)
+    r1 = eng.submit([4, 5], max_new_tokens=5)
+    done = {}
+    for _ in range(50):
+        for req in eng.step():
+            done[req.rid] = req.out
+        if len(done) == 2:
+            break
+    assert [done[r0], done[r1]] == ref
+
+
+def test_eos_mid_flight(tiny_model):
+    """EOS truncates one request mid-flight; the other slots keep going
+    and the freed slot is re-used by the queue."""
+    model, params = tiny_model
+    base = LPUEngine(model, params, slots=2, max_seq=64).generate(
+        [[1, 2, 3]], max_new_tokens=8)[0]
+    # pick an eos id at its FIRST occurrence past the first token, so the
+    # truncation point is unambiguous (greedy decode repeats tokens)
+    k = next((i for i in range(1, len(base)) if base[i] not in base[:i]),
+             None)
+    if k is None:
+        pytest.skip("degenerate greedy output: no unique mid-flight token")
+    eos = base[k]
+    eng = LPUEngine(model, params, slots=2, max_seq=64, eos_id=eos)
+    outs = eng.generate([[1, 2, 3], [4, 5], [6, 7, 8, 9]],
+                        max_new_tokens=8)
+    assert outs[0] == base[:k + 1]              # truncated at eos
+    assert outs[0][-1] == eos
+    assert all(len(o) <= 8 for o in outs)
+
+
+def test_slot_release_readmission_order(tiny_model):
+    """Queued requests are admitted FIFO as slots free up, and early
+    finishers release their slot mid-flight."""
+    model, params = tiny_model
+    eng = LPUEngine(model, params, slots=2, max_seq=64)
+    order = []
+    rids = []
+    # 5 requests on 2 slots; first two finish fast
+    for i, (p, n) in enumerate([([1, 2], 2), ([3, 4], 2), ([5, 6], 4),
+                                ([7, 8], 4), ([9, 10], 4)]):
+        rids.append(eng.submit(p, max_new_tokens=n))
+    while eng.sched.has_work():
+        for req in eng.step():
+            order.append(req.rid)
+    # the two short requests finish first, and every request completes
+    assert set(order) == set(rids)
+    assert set(order[:2]) == set(rids[:2])
+    assert eng.stats.occupancy > 0.5
+
+
+def test_submit_rejects_invalid_prompts(tiny_model):
+    """Over-long / empty prompts fail synchronously at submit(), not
+    mid-step after a slot has been claimed."""
+    model, params = tiny_model
+    eng = LPUEngine(model, params, slots=2, max_seq=32)
+    with pytest.raises(ValueError):
+        eng.submit(list(range(1, 40)), max_new_tokens=4)
+    with pytest.raises(ValueError):
+        eng.submit([], max_new_tokens=4)
+    # engine still serves normally afterwards
+    outs = eng.generate([[1, 2, 3]], max_new_tokens=3)
+    assert len(outs[0]) == 3
+
+
+def test_recurrent_family_prefill_not_bucketed():
+    """Pow2 bucket padding must NOT be applied to recurrent-state
+    families: mamba/rwkv fold every prefill position into their state,
+    so padded tokens would change the generated continuation.  Outputs
+    must be invariant to min_bucket."""
+    cfg = get_config("jamba-v0.1-52b").reduced()
+    plan = plan_model(cfg, None, (1,), "serve", esl_overlap=False,
+                      remat="none", compute_dtype="float32",
+                      param_dtype="float32")
+    model = build_model(cfg, plan)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    e1 = LPUEngine(model, params, slots=2, max_seq=64, min_bucket=4)
+    e2 = LPUEngine(model, params, slots=2, max_seq=64, min_bucket=32)
+    assert not e1.paged and not e1.bucketed
+    prompts = [[1, 2, 3, 4, 5], [6, 7]]       # off-bucket lengths
+    assert e1.generate(prompts, max_new_tokens=4) == \
+        e2.generate(prompts, max_new_tokens=4)
+
+
+def test_engine_stats_monitoring(tiny_model):
+    model, params = tiny_model
+    eng = LPUEngine(model, params, slots=2, max_seq=64)
+    eng.generate([[1, 2, 3], [4, 5], [6, 7]], max_new_tokens=4)
+    st = eng.stats
+    assert st.tokens > 0 and st.steps > 0
+    assert 0 < st.occupancy <= 1.0
+    assert st.prefills == 3
+    assert 1 <= st.prefill_traces <= 7          # log2(64)+1 buckets max
+    assert eng.kv_cache_bytes() > 0
