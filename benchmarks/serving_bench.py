@@ -12,6 +12,15 @@ and reports the serving-level statistics the paged refactor targets:
   worst-case allocation, plus peak block-pool utilization.
 
     PYTHONPATH=src python benchmarks/serving_bench.py --requests 16
+
+Ring mode (``--tp N [--rings R]``) adds the multi-LPU scaling view:
+the same trace through the ring-parallel paged engine with ESL overlap
+vs. the blocking-collective baseline (the paper's C2 contrast), plus
+per-ring tokens/s for an R x (tp=N) sub-ring fleet (C3).  Outputs are
+asserted identical to the tp=1 dense engine.  CPU note: fake devices
+measure *schedule* differences only — wall-clock speedups need ICI.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py --tp 2 --rings 2
 """
 from __future__ import annotations
 
@@ -19,17 +28,23 @@ import argparse
 import json
 import math
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.fake_devices import ensure_host_devices  # noqa: E402
+
+ensure_host_devices(sys.argv)   # must precede the jax import
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.compiler.mapper import plan_model  # noqa: E402
 from repro.configs import get_config  # noqa: E402
+from repro.launch.mesh import make_serving_mesh  # noqa: E402
 from repro.models.registry import build_model  # noqa: E402
-from repro.serving.engine import LPUEngine  # noqa: E402
+from repro.serving.engine import LPUEngine, MultiRingEngine  # noqa: E402
 
 
 def run_engine(model, params, prompts, *, slots, max_seq, max_new,
@@ -42,6 +57,71 @@ def run_engine(model, params, prompts, *, slots, max_seq, max_new,
     return eng, outs
 
 
+def ring_rows(cfg, prompts, dense_outs, args):
+    """tp>1: ESL-overlap vs blocking engines + per-ring fleet rows."""
+    tp, rings = args.tp, args.rings
+    mesh = make_serving_mesh(tp=tp, rings=1)
+    rows = []
+    for overlap in (True, False):
+        plan = plan_model(cfg, ("model",), (tp,), "serve",
+                          esl_overlap=overlap, remat="none",
+                          compute_dtype="float32", param_dtype="float32")
+        model = build_model(cfg, plan)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        eng = LPUEngine(model, params, slots=args.slots,
+                        max_seq=args.max_seq, paged=True,
+                        block_size=args.block_size, mesh=mesh)
+        outs = eng.generate(prompts, max_new_tokens=args.max_new)
+        st = eng.stats
+        rows.append({
+            "mode": f"tp{tp}-" + ("esl-overlap" if overlap
+                                  else "blocking"),
+            "tokens_per_s": round(st.tokens_per_s, 1),
+            "occupancy": round(st.occupancy, 3),
+            "decode_steps": st.steps,
+            "kv_bytes_per_rank": eng.per_rank_kv_bytes(),
+            "same_output_as_tp1_dense": outs == dense_outs,
+        })
+    ring_stats = []
+    if rings > 1:
+        fleet_mesh = make_serving_mesh(tp=tp, rings=rings)
+        plan = plan_model(cfg, ("model",), (tp,), "serve",
+                          esl_overlap=True, remat="none",
+                          compute_dtype="float32", param_dtype="float32")
+        model = build_model(cfg, plan)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        fleet = MultiRingEngine(model, params, fleet_mesh, ring_size=tp,
+                                slots=args.slots, max_seq=args.max_seq,
+                                paged=True, block_size=args.block_size)
+        t0 = time.time()
+        fleet_outs = fleet.generate(prompts,
+                                    max_new_tokens=args.max_new)
+        fleet_wall = time.time() - t0
+        for i, (eng, st) in enumerate(zip(fleet.engines,
+                                          fleet.per_ring_stats())):
+            ring_stats.append({
+                "ring": i, "requests": fleet.router.routed[i],
+                "tokens": st.tokens,
+                "tokens_per_s": round(st.tokens_per_s, 1),
+                "occupancy": round(st.occupancy, 3),
+                "kv_bytes_per_rank": eng.per_rank_kv_bytes(),
+            })
+        # fleet rate = total decode tokens / fleet wall-clock.  NOT the
+        # sum of per-ring rates: this host dispatches the rings
+        # sequentially inside each step round (one engine per host in a
+        # real deployment), so summing would overstate throughput ~Rx.
+        rows.append({
+            "mode": f"{rings}x(tp{tp})-fleet",
+            "tokens_per_s": round(sum(r["tokens"] for r in ring_stats)
+                                  / max(fleet_wall, 1e-9), 1),
+            "fleet_wall_s": round(fleet_wall, 2),
+            "same_output_as_tp1_dense": fleet_outs == dense_outs,
+        })
+    assert all(r["same_output_as_tp1_dense"] for r in rows), \
+        "ring-parallel output diverged from the tp=1 dense engine"
+    return rows, ring_stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -52,6 +132,10 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="paged pool size (0 = half the dense capacity)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="ESL ring width (adds the ring scaling rows)")
+    ap.add_argument("--rings", type=int, default=1,
+                    help="sub-ring fleet size (per-ring tokens/s rows)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -100,11 +184,18 @@ def main():
             "kv_bytes": eng.kv_cache_bytes(),
             "kv_dense_equiv_bytes": eng.dense_equiv_bytes(),
         })
+    scaling_rows, ring_stats = [], []
+    if args.tp > 1:
+        scaling_rows, ring_stats = ring_rows(cfg, prompts, dense_outs,
+                                             args)
+
     out = {
         "requests": args.requests,
         "distinct_prompt_lengths": distinct_lengths,
         "bucket_trace_bound_log2": bucket_bound,
         "rows": rows,
+        "scaling_rows": scaling_rows,
+        "per_ring": ring_stats,
         "same_output": dense_outs == paged_outs,
     }
     if args.json:
@@ -123,6 +214,17 @@ def main():
         print(f"  bucketed prefill traces <= log2(max_seq)+1 = "
               f"{bucket_bound} (vs {distinct_lengths} distinct lengths); "
               f"outputs identical: {out['same_output']}")
+        for r in scaling_rows:
+            extra = "" if "occupancy" not in r else \
+                (f"  occ {r['occupancy']:.2f}  "
+                 f"kv/rank {r['kv_bytes_per_rank']/1024:.0f} KiB")
+            print(f"  {r['mode']:>16}: {r['tokens_per_s']:8.1f} tok/s"
+                  f"{extra}  parity={r['same_output_as_tp1_dense']}")
+        for r in ring_stats:
+            print(f"    ring{r['ring']}: {r['requests']} reqs  "
+                  f"{r['tokens']} tokens  {r['tokens_per_s']:8.1f} tok/s  "
+                  f"occ {r['occupancy']:.2f}  "
+                  f"kv/rank {r['kv_bytes_per_rank']/1024:.0f} KiB")
     assert rows[1]["prefill_traces"] <= bucket_bound, \
         "bucketed prefill exceeded the log2(max_seq) trace bound"
     assert out["same_output"], "paged output diverged from dense"

@@ -1,10 +1,11 @@
-"""Reconfigurable ESL network (C3): two models on disjoint sub-rings.
+"""Reconfigurable ESL network (C3): two tenants on disjoint sub-rings.
 
 The paper: an 8-device ring splits into two independent 4-rings so two
 models serve concurrently with no interference and no rewiring.  Here:
-an 8-device (fake) mesh model axis splits into two 4-device sub-meshes,
-each serving a *different architecture* simultaneously; the ring groups
-are validated disjoint.
+an 8-device (fake) ``model`` axis splits into two 4-device sub-meshes,
+each running a full ring-parallel ``LPUEngine`` — a *different
+architecture* per tenant, ESL-overlapped collectives, paged KV pool
+sharded 1/4 per rank — and the ring groups are validated disjoint.
 
     PYTHONPATH=src python examples/multi_ring_serving.py
 """
@@ -17,46 +18,31 @@ from pathlib import Path  # noqa: E402
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+import zlib  # noqa: E402
+
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.compiler.mapper import plan_model  # noqa: E402
 from repro.configs import get_config  # noqa: E402
+from repro.core.compat import make_mesh  # noqa: E402
 from repro.core.rings import reconfigure, submeshes  # noqa: E402
-from repro.core.dist import make_axis_env  # noqa: E402
-from repro.core.steps import build_serve_step  # noqa: E402
 from repro.models.registry import build_model  # noqa: E402
+from repro.serving.engine import LPUEngine  # noqa: E402
 
 
-def serve_on(mesh, arch: str, steps: int = 4):
+def serve_on(mesh, arch: str):
+    """One tenant: a ring-parallel engine on its own sub-mesh."""
+    tp = mesh.devices.shape[-1]
     cfg = get_config(arch).reduced()
-    plan = plan_model(cfg, ("data", "model"),
-                      tuple(mesh.devices.shape), "serve",
+    plan = plan_model(cfg, ("model",), (tp,), "serve", esl_overlap=True,
                       remat="none", compute_dtype="float32",
                       param_dtype="float32")
     model = build_model(cfg, plan)
-    params, _ = model.init(jax.random.PRNGKey(hash(arch) % 2 ** 31))
-    specs, _ = model.param_specs()
-    params = jax.device_put(params, jax.tree.map(
-        lambda s: NamedSharding(mesh, s), specs,
-        is_leaf=lambda x: isinstance(x, P)))
-    step, meta = build_serve_step(model, mesh, 2, 32)
-    cache = model.init_cache(2, 32, dtype=jnp.float32)
-    cache = jax.device_put(cache, jax.tree.map(
-        lambda s: NamedSharding(mesh, s), meta["cache_specs"],
-        is_leaf=lambda x: isinstance(x, P)))
-    step = jax.jit(step)
-    toks = jnp.ones((2, 1), jnp.int32)
-    seq = []
-    for t in range(steps):
-        pos = jnp.full((2,), t, jnp.int32)
-        nxt, cache = step(params, cache, toks, pos)
-        toks = np.asarray(nxt)[:, None]
-        seq.append(int(nxt[0]))
-        toks = jnp.asarray(toks)
-    return seq
+    params, _ = model.init(
+        jax.random.PRNGKey(zlib.crc32(arch.encode()) % 2 ** 31))
+    eng = LPUEngine(model, params, slots=2, max_seq=32, mesh=mesh)
+    outs = eng.generate([[1, 2, 3, 4], [5, 6, 7]], max_new_tokens=6)
+    return outs, eng
 
 
 def main():
@@ -65,16 +51,19 @@ def main():
     print(f"[rings] 8-wide model axis -> {ring.n_rings} independent "
           f"4-rings: {ring.groups()}")
 
-    full = jax.make_mesh((1, 8), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    full = make_mesh((8,), ("model",))
     ring_a, ring_b = submeshes(full, ring_size=4)
     print(f"[rings] tenant A devices: {[d.id for d in ring_a.devices.flat]}")
     print(f"[rings] tenant B devices: {[d.id for d in ring_b.devices.flat]}")
 
-    seq_a = serve_on(ring_a, "smollm-135m")
-    seq_b = serve_on(ring_b, "granite-moe-3b-a800m")
-    print(f"[rings] tenant A (smollm)  decoded: {seq_a}")
-    print(f"[rings] tenant B (granite) decoded: {seq_b}")
+    outs_a, eng_a = serve_on(ring_a, "smollm-135m")
+    outs_b, eng_b = serve_on(ring_b, "qwen1.5-4b")
+    print(f"[rings] tenant A (smollm) decoded: {outs_a}")
+    print(f"[rings] tenant B (qwen)   decoded: {outs_b}")
+    for name, eng in (("A", eng_a), ("B", eng_b)):
+        print(f"[rings] tenant {name}: kv={'paged' if eng.paged else 'dense'}"
+              f" {eng.kv_cache_bytes()} B total, "
+              f"{eng.per_rank_kv_bytes()} B/rank over tp={eng.tp}")
     print("[rings] two models served concurrently on disjoint sub-rings "
           "— no cross-ring collective possible by construction")
 

@@ -32,6 +32,16 @@ compares against: full matmul followed by a blocking ``psum``
 (all-reduce) / ``all_gather``.  Both modes are numerically identical —
 property-tested — and differ only in collective schedule.
 
+**Sub-rings (C3)**: passing ``ring=RingConfig(total, ring_size)``
+confines every collective to the caller's sub-ring *inside one
+program*: ppermute pairs come from ``ring.perm_within_rings`` (never
+crossing a ring boundary) and gathers/reductions use the disjoint
+``axis_index_groups``, so ``n_rings`` independent tensor-parallel
+matmuls share one mesh axis.  ``tp`` is then the RING size, and the
+weight-block index is the rank *within* the ring.  (The other C3 style
+— truly independent programs on ``rings.submeshes`` — needs no special
+support here; the serving engine uses that one.)
+
 All functions degrade to plain local matmuls when ``axis is None``
 (single-device smoke mode).
 """
@@ -44,11 +54,24 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.rings import RingConfig
+
 
 def _ring_perm(tp: int, up: bool = True):
     if up:
         return [(i, (i + 1) % tp) for i in range(tp)]
     return [(i, (i - 1) % tp) for i in range(tp)]
+
+
+def _ring_env(axis: str, tp: int, ring: Optional[RingConfig], up: bool):
+    """(local rank, ppermute pairs, axis_index_groups) for a maybe-grouped
+    ring.  Sub-ring groups are contiguous index ranges, so the in-ring
+    rank is just ``global % ring_size``."""
+    r = lax.axis_index(axis)
+    if ring is None:
+        return r, _ring_perm(tp, up), None
+    assert tp == ring.ring_size, (tp, ring.ring_size)
+    return r % ring.ring_size, ring.perm_within_rings(up), ring.groups()
 
 
 def _take_block(w_blocks: jax.Array, idx) -> jax.Array:
@@ -62,12 +85,15 @@ def _take_block(w_blocks: jax.Array, idx) -> jax.Array:
 
 def ag_matmul(x: jax.Array, w: jax.Array, *, axis: Optional[str], tp: int,
               overlap: bool = True, scattered_in: Optional[bool] = None,
-              b: Optional[jax.Array] = None) -> jax.Array:
+              b: Optional[jax.Array] = None,
+              ring: Optional[RingConfig] = None) -> jax.Array:
     """y_loc = (allgather(x) @ w_loc) + b_loc.
 
     x: (..., D/tp) scattered on the last dim when ``scattered_in`` (the ESL
     convention), or already-full (..., D) otherwise (blocking baseline /
     raw model inputs).  w: (D, N_loc) local column tile. -> (..., N_loc).
+    ``ring``: confine the collective to this rank's sub-ring (C3 grouped
+    style); ``tp`` must equal ``ring.ring_size``.
     """
     if axis is None or tp == 1:
         y = jnp.einsum("...d,dn->...n", x, w)
@@ -79,9 +105,10 @@ def ag_matmul(x: jax.Array, w: jax.Array, *, axis: Optional[str], tp: int,
         return y + b if b is not None else y
     d_loc = x.shape[-1]
     w_blocks = w.reshape(tp, d_loc, w.shape[-1])
-    r = lax.axis_index(axis)
+    r, perm, groups = _ring_env(axis, tp, ring, up=True)
     if not overlap:
-        xf = lax.all_gather(x, axis, axis=x.ndim - 1, tiled=True)
+        xf = lax.all_gather(x, axis, axis=x.ndim - 1, tiled=True,
+                            axis_index_groups=groups)
         y = jnp.einsum("...d,dn->...n", xf, w)
         return y + b if b is not None else y
     # ESL: rotate input chunks around the ring; multiply the chunk we hold.
@@ -89,7 +116,7 @@ def ag_matmul(x: jax.Array, w: jax.Array, *, axis: Optional[str], tp: int,
     chunk = x
     for s in range(1, tp):
         # stream the chunk to the next peer while the dot above executes
-        chunk = lax.ppermute(chunk, axis, _ring_perm(tp, up=True))
+        chunk = lax.ppermute(chunk, axis, perm)
         src = (r - s) % tp  # rank whose chunk we now hold
         acc = acc + jnp.einsum("...d,dn->...n", chunk,
                                _take_block(w_blocks, src))
@@ -102,49 +129,56 @@ def ag_matmul(x: jax.Array, w: jax.Array, *, axis: Optional[str], tp: int,
 
 def rs_matmul(x: jax.Array, w: jax.Array, *, axis: Optional[str], tp: int,
               overlap: bool = True, scatter_out: bool = True,
-              b: Optional[jax.Array] = None) -> jax.Array:
+              b: Optional[jax.Array] = None,
+              ring: Optional[RingConfig] = None) -> jax.Array:
     """y = sum_over_ranks(x_loc @ w_loc), reduced across the ring.
 
     x: (..., M_loc); w: (M_loc, D_out).  scatter_out=True returns
     (..., D_out/tp) (reduce-scatter semantics — the ESL-native form);
     False returns the full (..., D_out) via psum (baseline).
+    ``ring``: confine the reduction to this rank's sub-ring (C3).
     """
     if axis is None or tp == 1:
         y = jnp.einsum("...m,md->...d", x, w)
         return y + b if b is not None else y
     if not overlap:
+        r, _, groups = _ring_env(axis, tp, ring, up=False)
         y = jnp.einsum("...m,md->...d", x, w)
         if scatter_out:
             y = lax.psum_scatter(y, axis, scatter_dimension=y.ndim - 1,
-                                 tiled=True)
+                                 tiled=True, axis_index_groups=groups)
             if b is not None:
-                y = y + _bias_slice(b, axis, tp)
+                y = y + _bias_slice(b, axis, tp, ring=ring)
             return y
-        y = lax.psum(y, axis)
+        y = lax.psum(y, axis, axis_index_groups=groups)
         return y + b if b is not None else y
     d_out = w.shape[-1]
     c = d_out // tp
     w_blocks = w.reshape(w.shape[0], tp, c).transpose(1, 0, 2)  # (tp, M, c)
-    r = lax.axis_index(axis)
+    r, perm, groups = _ring_env(axis, tp, ring, up=False)
     # ring reduce-scatter fused with the matmul: at each step add our
     # contribution for the block that is travelling toward its home rank.
     acc = jnp.einsum("...m,mc->...c", x, _take_block(w_blocks, (r + 1) % tp))
     for s in range(1, tp):
-        acc = lax.ppermute(acc, axis, _ring_perm(tp, up=False))
+        acc = lax.ppermute(acc, axis, perm)
         blk = (r + 1 + s) % tp
         acc = acc + jnp.einsum("...m,mc->...c", x, _take_block(w_blocks, blk))
     # acc now holds block r (scattered output)
     if b is not None:
-        acc = acc + _bias_slice(b, axis, tp)
+        acc = acc + _bias_slice(b, axis, tp, ring=ring)
     if scatter_out:
         return acc
-    return lax.all_gather(acc, axis, axis=acc.ndim - 1, tiled=True)
+    return lax.all_gather(acc, axis, axis=acc.ndim - 1, tiled=True,
+                          axis_index_groups=groups)
 
 
-def _bias_slice(b: jax.Array, axis: Optional[str], tp: int) -> jax.Array:
+def _bias_slice(b: jax.Array, axis: Optional[str], tp: int,
+                ring: Optional[RingConfig] = None) -> jax.Array:
     if axis is None or tp == 1:
         return b
     r = lax.axis_index(axis)
+    if ring is not None:
+        r = r % ring.ring_size
     c = b.shape[-1] // tp
     return lax.dynamic_slice_in_dim(b, r * c, c, axis=-1)
 

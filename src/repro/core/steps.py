@@ -23,6 +23,7 @@ from jax import lax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.core.dist import AxisEnv, gather_param, make_axis_env, psum_dp
 from repro.models.transformer import sharded_xent
 
@@ -212,7 +213,7 @@ def build_train_step(model, optimizer, mesh, global_batch: int,
         return grads, {"loss": loss, "aux": aux}
 
     if mesh is not None:
-        inner_sm = jax.shard_map(
+        inner_sm = shard_map(
             inner, mesh=mesh, in_specs=(specs, bspecs),
             out_specs=(specs, {"loss": P(), "aux": P()}), check_vma=False)
     else:
@@ -266,7 +267,7 @@ def build_serve_step(model, mesh, batch: int, max_seq: int):
 
     if mesh is not None:
         dp = tuple(env.dp) if env.dp else None
-        inner_sm = jax.shard_map(
+        inner_sm = shard_map(
             inner, mesh=mesh,
             in_specs=(specs, cspecs, bspecs["tokens"], bspecs["positions"]),
             out_specs=(P(dp), cspecs), check_vma=False)
@@ -301,7 +302,7 @@ def build_prefill_step(model, mesh, batch: int, max_seq: int):
         dp = tuple(env.dp) if env.dp else None
         fspec = bspecs.get("frames", P())
         pspec = bspecs.get("patch_embeds", P())
-        inner_sm = jax.shard_map(
+        inner_sm = shard_map(
             inner, mesh=mesh,
             in_specs=(specs, cspecs, bspecs["tokens"], fspec, pspec),
             out_specs=(P(dp), cspecs), check_vma=False)

@@ -14,7 +14,11 @@ oracles — bit-compatible (tests/test_streamline.py), used by the
 dry-run so XLA's fusion stands in for the hand kernels on CPU.
 
 This is the single-device inner loop; the ESL ring (core/esl.py) wraps
-it for tensor parallelism (the kernels consume rank-local tiles).
+it for tensor parallelism (the kernels consume rank-local tiles).  The
+KV side accepts either the dense per-slot cache or the serving engine's
+shared block pool (``block_table``) — same streamed chain, the table
+only redirects where KV tiles live (tests/test_streamline.py proves
+dense/paged parity).
 """
 from __future__ import annotations
 
@@ -37,12 +41,20 @@ def _mm(x2d: jax.Array, w: jax.Array, b: Optional[jax.Array], *,
 
 def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
                  positions: jax.Array, *, cfg, plan,
-                 use_kernels: bool = True, interpret: bool = True
+                 use_kernels: bool = True, interpret: bool = True,
+                 block_table: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decoder layer, one token, single device (tp folded outside).
 
     x: (B, D); cache: {'k','v': (B, S, G, dh)}; positions: (B,).
     Returns (y (B, D), new cache).  Weights in the mapper's stored layout.
+
+    Paged mode (``block_table`` (B, T) given): cache k/v are the shared
+    block pool (N, bs, G, dh).  The new token's KV scatters into
+    physical block ``table[b, pos // bs]`` at offset ``pos % bs``, and
+    attention consumes the per-request contiguous view gathered through
+    the table — the serving engine's pool layout, tp-folded just like
+    the weights (each rank holds its head shard of every block).
     """
     a = plan.attn
     B, D = x.shape
@@ -68,13 +80,28 @@ def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
         k_new = apply_rope(k_new[:, None], positions[:, None],
                            cfg.rope_theta)[:, 0]
 
-    def upd(c, n, pos):
-        return jax.lax.dynamic_update_slice_in_dim(
-            c, n[None].astype(c.dtype), pos, axis=0)
-    kc = jax.vmap(upd)(cache["k"], k_new, positions)
-    vc = jax.vmap(upd)(cache["v"], v_new, positions)
+    if block_table is not None:
+        # pool scatter: one (G, dh) row per sequence; inactive slots all
+        # target the null block 0 (don't-care, masked by valid length)
+        bs_blk = cache["k"].shape[1]
+        blk = jnp.take_along_axis(block_table,
+                                  (positions // bs_blk)[:, None],
+                                  axis=1)[:, 0]
+        off = positions % bs_blk
+        kc = cache["k"].at[blk, off].set(k_new.astype(cache["k"].dtype))
+        vc = cache["v"].at[blk, off].set(v_new.astype(cache["v"].dtype))
+        T = block_table.shape[1]
+        k_view = kc[block_table].reshape(B, T * bs_blk, *kc.shape[2:])
+        v_view = vc[block_table].reshape(B, T * bs_blk, *vc.shape[2:])
+    else:
+        def upd(c, n, pos):
+            return jax.lax.dynamic_update_slice_in_dim(
+                c, n[None].astype(c.dtype), pos, axis=0)
+        kc = jax.vmap(upd)(cache["k"], k_new, positions)
+        vc = jax.vmap(upd)(cache["v"], v_new, positions)
+        k_view, v_view = kc, vc
 
-    attn = decode_attention(q, kc, vc, positions + 1,
+    attn = decode_attention(q, k_view, v_view, positions + 1,
                             use_pallas=use_kernels, interpret=interpret)
     wo = p["attn"]["wo"].reshape(qpr * dh, D)
     x = x + _mm(attn.reshape(B, -1), wo, None, use_kernels=use_kernels,

@@ -1,0 +1,39 @@
+"""Pre-jax-import CPU device bootstrap for the ring-parallel drivers.
+
+``--xla_force_host_platform_device_count`` only takes effect if set
+before jax initializes, i.e. before ``import jax`` anywhere in the
+process — so the serving CLI and benchmark call this at module top,
+ahead of their jax imports.  Deliberately jax-free.
+"""
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+
+def flag_value(argv: Sequence[str], flag: str, default: int) -> int:
+    """Parse an integer ``--flag N`` / ``--flag=N`` from raw argv."""
+    for i, tok in enumerate(argv):
+        if tok == flag:
+            try:
+                return int(argv[i + 1])
+            except (IndexError, ValueError):
+                return default
+        if tok.startswith(flag + "="):
+            try:
+                return int(tok.split("=", 1)[1])
+            except ValueError:
+                return default
+    return default
+
+
+def ensure_host_devices(argv: Sequence[str]) -> None:
+    """Fake enough CPU devices for ``--tp``/``--rings`` runs.
+
+    No-op when the product is 1 or the user already set XLA_FLAGS
+    (their setting wins — we never clobber an explicit device count).
+    """
+    need = flag_value(argv, "--tp", 1) * flag_value(argv, "--rings", 1)
+    if need > 1 and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={need}"

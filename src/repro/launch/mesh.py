@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.compat import make_mesh
+
 # TPU v5e hardware constants used by the roofline / latency model
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip
@@ -24,16 +26,29 @@ def make_production_mesh(*, multi_pod: bool = False, tp: int = 16):
     ring width for extra data parallelism (§Perf: collective-bound
     training cells want a narrower ESL ring)."""
     axes, shape = mesh_axes_shape(multi_pod, tp)
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for multi-process-free CPU tests."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
+
+
+def make_serving_mesh(tp: int = 1, rings: int = 1):
+    """1-D ``model`` mesh for the serving engine: ``tp * rings`` devices.
+
+    The full axis is the physical ICI ring; :func:`repro.core.rings.
+    submeshes` carves it into ``rings`` independent ``tp``-wide sub-rings
+    (the paper's C3 reconfiguration), one LPUEngine per sub-ring.
+    """
+    total = tp * rings
+    n = len(jax.devices())
+    assert total <= n, \
+        f"serving mesh wants {total} devices but only {n} are visible " \
+        f"(set XLA_FLAGS=--xla_force_host_platform_device_count={total} " \
+        f"for CPU experiments)"
+    return make_mesh((total,), ("model",),
+                     devices=jax.devices()[:total])
 
 
 def mesh_axes_shape(multi_pod: bool, tp: int = 16):

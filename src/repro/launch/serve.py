@@ -4,23 +4,38 @@ CLI (CPU-feasible defaults):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm --reduced \
       --requests 8 --max-new 16
 
+Ring parallelism: ``--tp N`` shards the model over an N-wide ESL ring
+(weights AND the paged KV pool split 1/N per rank); ``--rings R`` serves
+R independent sub-rings concurrently — ``tp * rings`` devices total,
+one engine per sub-ring with least-loaded request routing (paper C2/C3).
+On CPU the driver fakes the devices automatically
+(``--xla_force_host_platform_device_count``), so
+``--tp 2 --rings 2`` is runnable on a laptop.
+
 Paged-KV knobs: ``--block-size`` (tokens per KV block), ``--num-blocks``
 (pool size incl. the reserved null block; 0 = dense-equivalent capacity),
+``--kv-budget-mb`` (size the pool from a per-rank HBM budget instead),
 ``--min-bucket`` (smallest power-of-two prefill bucket), ``--dense``
 (force the contiguous per-slot cache).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 
-import jax
-import numpy as np
+from repro.launch.fake_devices import ensure_host_devices
 
-from repro.compiler.mapper import plan_model
-from repro.configs import get_config
-from repro.models.registry import build_model
-from repro.serving.engine import LPUEngine
-from repro.serving.sampler import SamplingParams
+ensure_host_devices(sys.argv)   # must precede the jax import
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.compiler.mapper import plan_model  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.launch.mesh import make_serving_mesh  # noqa: E402
+from repro.models.registry import build_model  # noqa: E402
+from repro.serving.engine import LPUEngine, MultiRingEngine  # noqa: E402
+from repro.serving.sampler import SamplingParams  # noqa: E402
 
 
 def main():
@@ -34,6 +49,13 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="ESL ring width (devices per model replica)")
+    ap.add_argument("--rings", type=int, default=1,
+                    help="independent sub-rings (engines); uses "
+                         "tp*rings devices")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="blocking collectives baseline (vs ESL overlap)")
     ap.add_argument("--dense", action="store_true",
                     help="force the dense per-slot KV cache")
     ap.add_argument("--block-size", type=int, default=0,
@@ -41,6 +63,9 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="KV pool size incl. null block "
                          "(0 = dense-equivalent capacity)")
+    ap.add_argument("--kv-budget-mb", type=int, default=0,
+                    help="per-rank KV HBM budget in MiB (sizes the pool "
+                         "when --num-blocks is 0)")
     ap.add_argument("--min-bucket", type=int, default=16,
                     help="smallest power-of-two prefill bucket")
     args = ap.parse_args()
@@ -48,17 +73,32 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    plan = plan_model(cfg, None, (1,), "serve", esl_overlap=False,
-                      remat="none", compute_dtype="float32",
-                      param_dtype="float32")
+    tp, rings = args.tp, args.rings
+    if tp > 1 or rings > 1:
+        mesh = make_serving_mesh(tp=tp, rings=rings)
+        plan = plan_model(cfg, ("model",), (tp,), "serve",
+                          esl_overlap=not args.no_overlap, remat="none",
+                          compute_dtype="float32", param_dtype="float32")
+    else:
+        mesh = None
+        plan = plan_model(cfg, None, (1,), "serve", esl_overlap=False,
+                          remat="none", compute_dtype="float32",
+                          param_dtype="float32")
     model = build_model(cfg, plan)
     params, _ = model.init(jax.random.PRNGKey(0))
-    engine = LPUEngine(model, params, slots=args.slots,
-                       max_seq=args.max_seq,
-                       paged=False if args.dense else None,
-                       block_size=args.block_size,
-                       num_blocks=args.num_blocks,
-                       min_bucket=args.min_bucket)
+    engine_kw = dict(slots=args.slots, max_seq=args.max_seq,
+                     paged=False if args.dense else None,
+                     block_size=args.block_size,
+                     num_blocks=args.num_blocks,
+                     kv_budget_bytes=args.kv_budget_mb << 20,
+                     min_bucket=args.min_bucket)
+    if rings > 1:
+        engine = MultiRingEngine(model, params, mesh, ring_size=tp,
+                                 **engine_kw)
+        first = engine.engines[0]
+    else:
+        engine = LPUEngine(model, params, mesh=mesh, **engine_kw)
+        first = engine
 
     rng = np.random.RandomState(0)
     prompts = [list(rng.randint(1, cfg.vocab_size,
@@ -71,15 +111,25 @@ def main():
 
     outs = engine.generate(prompts, max_new_tokens=args.max_new,
                            params=sp, stream_cb=cb)
-    st = engine.stats
-    mode = "paged" if engine.paged else "dense"
-    print(f"[serve] {len(outs)} requests, {st.tokens} tokens, "
-          f"{st.tokens_per_s:.1f} tok/s, occupancy {st.occupancy:.2f}, "
-          f"{st.steps} decode steps")
-    print(f"[serve] kv={mode} bytes={engine.kv_cache_bytes()} "
-          f"(dense-equiv {engine.dense_equiv_bytes()}), "
-          f"prefill traces={st.prefill_traces}, "
-          f"preemptions={st.preemptions}")
+    mode = "paged" if first.paged else "dense"
+    if rings > 1:
+        print(f"[serve] {len(outs)} requests over {rings} sub-rings "
+              f"(tp={tp} each), routed {engine.router.routed}")
+        for i, (eng, st) in enumerate(zip(engine.engines,
+                                          engine.per_ring_stats())):
+            print(f"[serve]   ring{i}: {st.tokens} tokens, "
+                  f"{st.tokens_per_s:.1f} tok/s, occ {st.occupancy:.2f}, "
+                  f"kv/rank {eng.per_rank_kv_bytes()} B")
+    else:
+        st = first.stats
+        print(f"[serve] {len(outs)} requests, {st.tokens} tokens, "
+              f"{st.tokens_per_s:.1f} tok/s, occupancy {st.occupancy:.2f}, "
+              f"{st.steps} decode steps, tp={tp}")
+        print(f"[serve] kv={mode} bytes={first.kv_cache_bytes()} "
+              f"(per-rank {first.per_rank_kv_bytes()}, "
+              f"dense-equiv {first.dense_equiv_bytes()}), "
+              f"prefill traces={st.prefill_traces}, "
+              f"preemptions={st.preemptions}")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o[:12]}")
 

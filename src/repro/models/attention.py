@@ -273,7 +273,11 @@ def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
     Paged mode (``block_table`` given): cache['k'/'v'] is the shared block
     pool (N, bs, kpr, dh); the per-request contiguous view is gathered
     through the (B, T) block table, masked by ``positions`` as usual (null
-    blocks past the valid length never contribute).
+    blocks past the valid length never contribute).  Under ring tp the
+    pool arrives head-sharded (kpr = Gp/tp local heads) with the SAME
+    block ids on every rank, so the replicated table drives all shards —
+    paged decode composes with the ESL ring, but not with kv-seq
+    sharding (the pool's block dim already replaces the seq dim).
     """
     a = plan.attn
     q, k_new, v_new = qkv_proj(p, x, env, plan)
@@ -283,7 +287,8 @@ def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
 
     kc, vc = cache["k"], cache["v"]
     if block_table is not None:
-        assert env.kv_seq_axis is None, "paged KV is single-rank"
+        assert env.kv_seq_axis is None, \
+            "paged KV shards heads over the model ring, not the seq axis"
         B, T = block_table.shape
         bs = kc.shape[1]
         kc = kc[block_table].reshape(B, T * bs, kc.shape[2], kc.shape[3])

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import contextlib
 import math
+import zlib
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -60,8 +61,12 @@ class InitCtx:
         return "/".join(self._stack + [name])
 
     def fold(self, name: str) -> jax.Array:
-        """Deterministic per-path key (abstract mode never consumes RNG)."""
-        h = np.uint32(abs(hash(self._path(name))) % (2 ** 31))
+        """Deterministic per-path key (abstract mode never consumes RNG).
+
+        crc32, NOT ``hash()``: Python string hashing is salted per
+        process (PYTHONHASHSEED), which silently made params — and
+        every greedy token stream — unreproducible across runs."""
+        h = np.uint32(zlib.crc32(self._path(name).encode()) & 0x7FFFFFFF)
         return jax.random.fold_in(self._key, h)
 
     # -- creation -----------------------------------------------------------
@@ -229,8 +234,9 @@ def run_sharded(fn, mesh, in_specs, out_specs, *args,
     """shard_map when a mesh is given, plain call otherwise (smoke tests)."""
     if mesh is None:
         return fn(*args)
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=check_vma)(*args)
+    from repro.core.compat import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=check_vma)(*args)
 
 
 def axis_index_or_zero(name: Optional[str]) -> jax.Array:

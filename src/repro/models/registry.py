@@ -115,8 +115,15 @@ class Model:
             out[f"l{j}"] = stack(c)
         return out
 
-    def cache_specs(self, env: AxisEnv):
-        """PartitionSpec tree matching init_cache (decoder-only families)."""
+    def cache_specs(self, env: AxisEnv, paged: bool = False):
+        """PartitionSpec tree matching init_cache (decoder-only families).
+
+        ``paged=True`` describes the shared block pool: stacked per-layer
+        leaves are (n_sb, num_blocks, block_size, Gp, dh) with the stored
+        kv heads (Gp) sharded over the model ring — each rank holds its
+        head shard of EVERY block, so one host-side block table drives
+        all ranks and pool bytes split 1/tp per rank.
+        """
         cfg, plan = self.cfg, self.plan
         dp = tuple(env.dp) if env.dp else None
         m = plan.tp_axis
@@ -135,7 +142,10 @@ class Model:
                                 "shift_c": P(None, dp, None, scat),
                                 "wkv": P(None, dp, m, None, None)}
             elif cfg.is_attention_layer(j):
-                if kv_w > 1:
+                if paged:
+                    out[f"l{j}"] = {"k": P(None, None, None, m, None),
+                                    "v": P(None, None, None, m, None)}
+                elif kv_w > 1:
                     out[f"l{j}"] = {"k": P(None, dp, env.kv_seq_axis, None,
                                            m, None),
                                     "v": P(None, dp, env.kv_seq_axis, None,

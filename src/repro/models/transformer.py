@@ -9,6 +9,12 @@ scanned with stacked parameters, so the lowered HLO stays compact for
 Activations flow *scattered* over the model ring between layers when ESL
 overlap is on (plan.esl_overlap) and *replicated* in the blocking
 baseline; every sub-module follows the same convention.
+
+Decode rides the scan CARRY so XLA aliases cache buffers in place; the
+same path serves the dense per-slot cache, the kv-seq-sharded cache and
+the serving engine's paged pool (``block_tables``), single-device or
+inside the engine's ``shard_map`` ring — the cache pytree's sharding is
+declared by ``registry.Model.cache_specs``, never inspected here.
 """
 from __future__ import annotations
 

@@ -1,7 +1,10 @@
 """HyperDex-style runtime layer: continuous-batching serving engine.
 
 ``LPUEngine`` mirrors the paper's runtime API surface on top and a paged
-KV-cache serving stack below:
+KV-cache serving stack below; with a mesh it becomes the paper's
+*multi-LPU* configuration — the whole prefill/decode path runs inside
+one ``shard_map`` over the ``model`` ring so the ESL collectives (C2)
+and the paged pool compose:
 
 * **API** — the HF-like blocking ``generate(prompts, ...)`` plus a
   non-blocking ``submit(request) / step() / drain()`` interface for
@@ -27,9 +30,26 @@ KV-cache serving stack below:
 * **Preemption** — when the pool is exhausted, the newest sequence is
   evicted and re-prefiled later (recompute), protecting old requests.
 
+**Ring parallelism (C2)** — ``LPUEngine(model, params, mesh=...)`` with
+a plan built for the mesh shards weights AND the KV pool over the
+``model`` axis (stored kv heads split 1/tp per rank: same block ids on
+every rank, 1/tp of the bytes).  Decode and prefill are jitted
+``shard_map`` programs whose matmuls stream partial products around the
+ICI ring (:mod:`repro.core.esl` ``ag_matmul``/``rs_matmul``); the
+engine's host loop — admission, block tables, sampling — is unchanged,
+because tables and sampled tokens are replicated ring-wide.  The token
+stream matches the single-device engine (tests/test_serving.py).
+
+**Sub-rings (C3)** — :class:`MultiRingEngine` carves the model axis
+into ``RingConfig`` sub-rings (:mod:`repro.core.rings`) and runs one
+independent ``LPUEngine`` per sub-mesh: disjoint device groups, so no
+collective of one tenant can touch another's ring.  Requests are
+admitted per-ring by :class:`repro.serving.scheduler.RingRouter`
+(least outstanding tokens).
+
 Monitoring hooks expose tokens/s, slot occupancy, prefill trace count,
-preemptions and KV bytes — the datacenter-level statistics HyperDex
-exposes from its driver.
+preemptions and KV bytes (total and per rank) — the datacenter-level
+statistics HyperDex exposes from its driver.
 """
 from __future__ import annotations
 
@@ -41,13 +61,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.core.dist import make_axis_env
+from repro.core.rings import reconfigure, submeshes
 from repro.serving.kv_cache import (LANE, BlockPool, cache_bytes,
+                                    per_rank_block_bytes,
+                                    pool_blocks_for_budget,
                                     scatter_prefill_dense,
                                     scatter_prefill_pages)
 from repro.serving.sampler import SamplingParams, sample_local
-from repro.serving.scheduler import Scheduler, SeqSlot
+from repro.serving.scheduler import RingRouter, Scheduler, SeqSlot
 
 StreamCB = Callable[[int, int], None]   # (request_id, token)
 
@@ -95,13 +121,22 @@ class EngineStats:
 
 
 class LPUEngine:
-    """Slot-based continuous-batching decode engine (single host)."""
+    """Slot-based continuous-batching decode engine (single host).
+
+    ``mesh=None`` is the single-device smoke configuration.  With a
+    1-axis ``model`` mesh (and a plan built for it) the engine runs its
+    jitted steps inside ``shard_map`` over the ring — weights, the KV
+    pool and the prefill caches are placed with the mapper's
+    PartitionSpecs; block tables, positions and sampled tokens stay
+    replicated host state, identical to the single-device loop.
+    """
 
     def __init__(self, model, params, *, slots: int = 4,
                  max_seq: int = 256, eos_id: Optional[int] = None,
                  rng: Optional[jax.Array] = None,
                  paged: Optional[bool] = None, block_size: int = 0,
-                 num_blocks: int = 0, min_bucket: int = 16):
+                 num_blocks: int = 0, min_bucket: int = 16,
+                 mesh=None, kv_budget_bytes: int = 0):
         self.model = model
         self.cfg = model.cfg
         self.plan = model.plan
@@ -109,6 +144,15 @@ class LPUEngine:
         self.slots = slots
         self.max_seq = max_seq
         self.eos_id = eos_id
+        self.mesh = mesh
+        if mesh is not None:
+            assert self.plan.mesh_axes is not None and \
+                tuple(mesh.axis_names) == tuple(self.plan.mesh_axes) and \
+                tuple(mesh.devices.shape) == tuple(self.plan.mesh_shape), \
+                (f"plan built for {self.plan.mesh_axes}"
+                 f"{self.plan.mesh_shape} but engine mesh is "
+                 f"{mesh.axis_names}{mesh.devices.shape}")
+        self.tp = self.plan.tp if mesh is not None else 1
         self.env = make_axis_env(self.plan, batch=slots)
         self.env1 = make_axis_env(self.plan, batch=1)
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -126,6 +170,17 @@ class LPUEngine:
             assert max_seq % self.block_size == 0, \
                 (max_seq, self.block_size)
             self.table_len = max_seq // self.block_size
+            if not num_blocks and kv_budget_bytes:
+                # size the pool from the per-rank HBM budget: heads are
+                # sharded over the ring, so a tp-ring stretches the same
+                # budget to tp x the resident tokens
+                a = self.plan.attn
+                num_blocks = pool_blocks_for_budget(
+                    kv_budget_bytes,
+                    per_rank_block_bytes(
+                        self.cfg.n_layers, a.kv_per_rank, a.d_head,
+                        self.block_size,
+                        jnp.dtype(self.plan.cache_dtype).itemsize))
             # default pool: dense-equivalent capacity + the null block
             self.num_blocks = num_blocks or (slots * self.table_len + 1)
             pool = BlockPool(self.num_blocks, self.block_size)
@@ -145,10 +200,13 @@ class LPUEngine:
         self._results: Dict[int, List[int]] = {}
         self._rid = 0
         self._buckets_traced: Set[int] = set()
-        self._decode = jax.jit(self._decode_fn)
-        self._prefill = jax.jit(self._prefill_fn)
-        self._write_pages = jax.jit(scatter_prefill_pages)
-        self._write_dense = jax.jit(scatter_prefill_dense)
+        if mesh is None:
+            self._decode = jax.jit(self._decode_fn)
+            self._prefill = jax.jit(self._prefill_fn)
+            self._write_pages = jax.jit(scatter_prefill_pages)
+            self._write_dense = jax.jit(scatter_prefill_dense)
+        else:
+            self._build_mesh_fns()
 
     # -- jitted steps --------------------------------------------------
 
@@ -174,6 +232,83 @@ class LPUEngine:
         row = lax.dynamic_index_in_dim(logits[0], true_len - 1, 0,
                                        keepdims=False)
         return row, new_cache
+
+    # -- ring-parallel (shard_map) step construction -------------------
+
+    def _named(self, spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+    def _build_mesh_fns(self) -> None:
+        """shard_map-wrapped decode/prefill over the model ring.
+
+        Everything the host loop touches stays replicated (tokens,
+        positions, block tables in; the sampled-from logits row out, so
+        sampling happens once, ring-consistent).  Weights, the KV pool
+        and prefill caches live sharded per the mapper's specs; inside
+        the program every matmul is an ESL collective matmul.
+        """
+        mesh, m = self.mesh, self.plan.tp_axis
+        specs, _ = self.model.param_specs()
+        self.params = jax.device_put(self.params, self._named(specs))
+        cspecs = self.model.cache_specs(self.env, paged=self.paged)
+        cspecs_named = self._named(cspecs)
+        self.cache = jax.device_put(self.cache, cspecs_named)
+        pf_cspecs = self.model.cache_specs(self.env1)
+        self._pf_named = self._named(pf_cspecs)
+        self._pf_zero: Dict[int, object] = {}   # bucket -> zeroed cache
+
+        if self.paged:
+            def dec(params, cache, tokens, positions, tables):
+                return self._decode_fn(params, cache, tokens, positions,
+                                       tables)
+            dec_sm = jax.jit(shard_map(
+                dec, mesh=mesh,
+                in_specs=(specs, cspecs, P(None, None), P(None),
+                          P(None, None)),
+                out_specs=(P(None, m), cspecs), check_vma=False))
+            self._decode = dec_sm
+        else:
+            def dec_d(params, cache, tokens, positions):
+                return self._decode_fn(params, cache, tokens, positions,
+                                       None)
+            dec_sm = jax.jit(shard_map(
+                dec_d, mesh=mesh,
+                in_specs=(specs, cspecs, P(None, None), P(None)),
+                out_specs=(P(None, m), cspecs), check_vma=False))
+            self._decode = lambda p, c, t, pos, tables: dec_sm(p, c, t, pos)
+
+        def pre(params, cache0, tokens, true_len):
+            B, S = tokens.shape
+            positions = jnp.broadcast_to(jnp.arange(S), (1, S))
+            logits, new_cache, _ = self.model.forward(
+                params, tokens, env=self.env1, mode="prefill",
+                cache=cache0, positions=positions)
+            row = lax.dynamic_index_in_dim(logits[0], true_len - 1, 0,
+                                           keepdims=False)
+            return row, new_cache
+
+        pre_sm = jax.jit(shard_map(
+            pre, mesh=mesh,
+            in_specs=(specs, pf_cspecs, P(None, None), P()),
+            out_specs=(P(m), pf_cspecs), check_vma=False))
+
+        def prefill(params, tokens, true_len):
+            # the bucket cache is an INPUT here (the single-device path
+            # allocates it inside the jit): shard_map needs it placed
+            # with the mapper's specs, and prefill overwrites the whole
+            # [0:S) prefix, so one zeroed buffer per bucket is reusable
+            S = int(tokens.shape[1])
+            if S not in self._pf_zero:
+                self._pf_zero[S] = jax.device_put(
+                    self.model.init_cache(1, S), self._pf_named)
+            return pre_sm(params, self._pf_zero[S], tokens, true_len)
+
+        self._prefill = prefill
+        self._write_pages = jax.jit(scatter_prefill_pages,
+                                    out_shardings=cspecs_named)
+        self._write_dense = jax.jit(scatter_prefill_dense,
+                                    out_shardings=cspecs_named)
 
     # -- sampling ------------------------------------------------------
 
@@ -349,6 +484,14 @@ class LPUEngine:
         """Bytes held by the KV cache (block pool or dense slot cache)."""
         return cache_bytes(self.cache)
 
+    def per_rank_kv_bytes(self) -> int:
+        """KV bytes resident on ONE ring rank (heads shard 1/tp)."""
+        return self.kv_cache_bytes() // self.tp
+
+    def pending_load(self) -> int:
+        """Outstanding tokens (queued + active) — the router's signal."""
+        return self.sched.pending_tokens()
+
     def dense_equiv_bytes(self) -> int:
         """Bytes a dense (slots, max_seq) cache of this model would take."""
         if not self.paged:
@@ -356,3 +499,93 @@ class LPUEngine:
         per_tok = self.kv_cache_bytes() // (self.num_blocks
                                             * self.block_size)
         return per_tok * self.slots * self.max_seq
+
+
+class MultiRingEngine:
+    """C3 multi-tenant serving: one :class:`LPUEngine` per ESL sub-ring.
+
+    The paper's router splits an 8-LPU ring into 2x4 / 4x2 sub-rings so
+    several request streams are served concurrently with no cross-ring
+    interference.  Here the ``model`` axis of ``mesh`` is carved by
+    :func:`repro.core.rings.submeshes` into ``total // ring_size``
+    disjoint sub-meshes; each gets an independent ring-parallel engine
+    (its own weight replica, KV pool and scheduler), so no collective of
+    one ring can involve another ring's devices — the paper's isolation
+    property by construction.
+
+    ``model`` must be built with a plan for ONE sub-ring (mesh axes
+    ``("model",)``, shape ``(ring_size,)``); the same plan serves every
+    ring because the sub-meshes are congruent.  Admission is per-ring:
+    :class:`repro.serving.scheduler.RingRouter` sends each request to
+    the ring with the fewest outstanding tokens.
+
+    Concurrency caveat: isolation is the paper's property reproduced
+    here; *wall-clock* concurrency is not.  ``step()`` dispatches the
+    rings sequentially from one host thread, and each engine's step
+    blocks on its host-side sampling sync — a real deployment runs one
+    driver per sub-ring.  Throughput accounting must therefore use
+    total tokens over fleet wall time, never the sum of per-ring rates
+    (see ``benchmarks/serving_bench.py``).
+    """
+
+    def __init__(self, model, params, mesh, *, ring_size: int,
+                 **engine_kw):
+        total = mesh.devices.shape[-1]
+        self.ring_cfg = reconfigure(total, ring_size)
+        assert self.ring_cfg.validate_disjoint()
+        assert model.plan.tp == ring_size, \
+            (f"model planned for tp={model.plan.tp}, "
+             f"ring_size={ring_size}")
+        self.engines = [LPUEngine(model, params, mesh=sub, **engine_kw)
+                        for sub in submeshes(mesh, ring_size)]
+        self.router = RingRouter(len(self.engines))
+        self.ring_of: Dict[int, int] = {}
+        self._rid = 0
+
+    @property
+    def n_rings(self) -> int:
+        return len(self.engines)
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
+               params: Optional[SamplingParams] = None,
+               stream_cb: Optional[StreamCB] = None) -> int:
+        """Route to the least-loaded sub-ring; returns a global rid."""
+        ring = self.router.route([e.pending_load() for e in self.engines])
+        req = Request(self._rid, list(prompt), max_new_tokens,
+                      params or SamplingParams(0.0, 0, 1.0),
+                      stream_cb=stream_cb)
+        self._rid += 1
+        self.engines[ring].submit(req)
+        self.ring_of[req.rid] = ring
+        return req.rid
+
+    def step(self) -> List[Request]:
+        """One round on every sub-ring that has work."""
+        done: List[Request] = []
+        for eng in self.engines:
+            if eng.sched.has_work():
+                done.extend(eng.step())
+        return done
+
+    def has_work(self) -> bool:
+        return any(e.sched.has_work() for e in self.engines)
+
+    def drain(self) -> Dict[int, List[int]]:
+        while self.has_work():
+            self.step()
+        out: Dict[int, List[int]] = {}
+        for eng in self.engines:
+            out.update(eng.drain())
+        return out
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 max_new_tokens: int = 32,
+                 params: Optional[SamplingParams] = None,
+                 stream_cb: Optional[StreamCB] = None) -> List[List[int]]:
+        rids = [self.submit(list(p), max_new_tokens, params,
+                            stream_cb=stream_cb) for p in prompts]
+        results = self.drain()
+        return [results[r] for r in rids]
+
+    def per_ring_stats(self) -> List[EngineStats]:
+        return [e.stats for e in self.engines]

@@ -54,6 +54,36 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
     return max(1, math.ceil(n_tokens / block_size))
 
 
+def per_rank_block_bytes(n_layers: int, kv_heads_per_rank: int,
+                         d_head: int, block_size: int,
+                         dtype_bytes: int = 2) -> int:
+    """Bytes ONE pool block occupies on ONE ring rank (K and V).
+
+    Under tensor parallelism the pool's stored-head dim is sharded over
+    the model ring, so each rank holds ``kv_heads_per_rank`` of every
+    block — pool HBM divides by tp, which is what lets a tp-wide ring
+    serve proportionally longer contexts at a fixed per-chip budget.
+    """
+    return 2 * n_layers * block_size * kv_heads_per_rank * d_head \
+        * dtype_bytes
+
+
+def pool_blocks_for_budget(budget_bytes: int, block_bytes: int) -> int:
+    """Largest pool (incl. the null block) fitting a per-rank HBM budget.
+
+    ``block_bytes`` is the per-rank footprint from
+    :func:`per_rank_block_bytes`.  Raises when the budget cannot hold the
+    null block plus one allocatable block — a pool that small can never
+    admit a request.
+    """
+    n = int(budget_bytes // max(block_bytes, 1))
+    if n < 2:
+        raise ValueError(
+            f"KV budget {budget_bytes}B holds {n} blocks of "
+            f"{block_bytes}B/rank; need >= 2 (null block + 1)")
+    return n
+
+
 class BlockPool:
     """Free-list allocator over the shared block pool.
 

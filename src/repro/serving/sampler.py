@@ -1,10 +1,30 @@
 """Token sampler — the VXE "sampling with sort" instruction.
 
-temperature / top-k / top-p over (possibly vocab-sharded) logits.
-Sharded path: each rank pre-selects its local top-k (k<=64), the tiny
-(tp x k) candidate set is all-gathered, and the final softmax/sort runs
-on that — the full logits row never crosses the ring (paper: the sampler
-sorts logits on-chip for the same reason).
+The paper puts sampling ON the LPU (a vector-execution-engine sort over
+the logits) because shipping a full vocabulary row to the host per token
+would serialize the generation loop on PCIe.  The analog here has two
+layers:
+
+* :func:`sample_local` — temperature / top-k / top-p over a full
+  logits row, host- or device-side.  top-p keeps the smallest prefix of
+  the sorted distribution with cumulative mass >= p (nucleus), top-k
+  thresholds at the k-th sorted logit; temperature <= 0 short-circuits
+  to greedy argmax so the deterministic path never consumes RNG — that
+  invariant is what makes the engine's greedy token streams
+  bit-reproducible across runs and across tp configurations
+  (tests/test_serving.py ring parity).
+
+* :func:`sample_sharded` — the ring form for vocab-sharded logits
+  (``lm_logits`` never materializes the full row): each rank pre-selects
+  its local top-k (k <= 64), only the tiny (tp x k) candidate set is
+  all-gathered, and the final softmax/sort runs on that.  Every rank
+  draws with the SAME rng, so the chosen token is replicated ring-wide
+  without a broadcast — the same no-divergence trick the serving engine
+  relies on when it samples once on the host from gathered logits.
+
+Mirrors the on-chip sort rationale of the paper's C1 datapath; the
+serving engine (:mod:`repro.serving.engine`) consumes
+:class:`SamplingParams` per request.
 """
 from __future__ import annotations
 

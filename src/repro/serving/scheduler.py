@@ -1,7 +1,13 @@
 """Request-level scheduler: admission, bucketed prefill, preemption.
 
 Sits between the engine's ``submit()`` queue and the fixed decode batch of
-``slots``.  Three policies live here, all host-side (no jax):
+``slots``.  All policy is host-side (no jax) — the device programs only
+ever see a full slot batch plus replicated block tables, which is what
+lets the same scheduler drive the single-device engine and the
+ring-parallel ``shard_map`` engine unchanged (the paper's host/LPU
+split: the driver sequences work, the accelerators never branch).
+
+Four policies live here:
 
 * **Admission** — FIFO: a queued request is admitted when a slot is free
   AND (paged mode) the block pool can cover its prompt.  Prompt lengths
@@ -15,12 +21,17 @@ Sits between the engine's ``submit()`` queue and the fixed decode batch of
   freed, it re-enters the queue front, and its tokens so far are
   re-prefiled on re-admission).  LIFO victim choice protects the oldest
   requests' latency, mirroring vLLM's recompute preemption.
+* **Per-ring admission** — with reconfigurable sub-rings (paper C3, one
+  engine per sub-ring), :class:`RingRouter` assigns each incoming
+  request to the ring with the fewest outstanding tokens
+  (:meth:`Scheduler.pending_tokens`), keeping tenant rings balanced
+  without any cross-ring coupling once a request is placed.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional
+from typing import Deque, List, Optional, Sequence
 
 from repro.serving.kv_cache import BlockPool, blocks_for, bucket_for
 
@@ -66,6 +77,19 @@ class Scheduler:
 
     def num_active(self) -> int:
         return sum(1 for s in self.active if s is not None)
+
+    def pending_tokens(self) -> int:
+        """Outstanding work in tokens: queued prompts still to prefill
+        plus every request's remaining decode budget.  Host-side only —
+        this is the load signal :class:`RingRouter` balances on."""
+        load = 0
+        for req in self.queue:
+            load += len(req.resume_tokens()) \
+                + max(req.max_new_tokens - len(req.out), 0)
+        for s in self.active:
+            if s is not None:
+                load += max(s.req.max_new_tokens - len(s.req.out), 1)
+        return load
 
     def bucket(self, n_tokens: int) -> int:
         return bucket_for(n_tokens, self.max_seq, self.min_bucket)
@@ -174,3 +198,27 @@ class Scheduler:
             self.pool.free(seq.blocks)
         seq.blocks = []
         self.active[slot] = None
+
+
+class RingRouter:
+    """Per-ring admission across sub-ring engines (paper C3).
+
+    Stateless beyond a routed-count: the decision each time is simply
+    the ring with the least outstanding tokens (ties -> lowest ring id,
+    so an idle fleet fills round-robin).  Deliberately NOT work-stealing:
+    once placed, a request's KV lives in one ring's pool, and moving it
+    would mean a cross-ring recompute — the paper's rings share nothing.
+    """
+
+    def __init__(self, n_rings: int):
+        assert n_rings >= 1
+        self.n_rings = n_rings
+        self.routed = [0] * n_rings
+
+    def route(self, loads: Sequence[int]) -> int:
+        """Pick the target ring for one request given per-ring loads
+        (:meth:`Scheduler.pending_tokens` of each ring's engine)."""
+        assert len(loads) == self.n_rings, (len(loads), self.n_rings)
+        ring = min(range(self.n_rings), key=lambda i: (loads[i], i))
+        self.routed[ring] += 1
+        return ring

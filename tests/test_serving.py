@@ -186,6 +186,97 @@ def test_recurrent_family_prefill_not_bucketed():
         e2.generate(prompts, max_new_tokens=4)
 
 
+# ---------------------------------------------------------------------------
+# ring-parallel serving (C2/C3): tp=2 shard_map engine == tp=1 dense engine
+# ---------------------------------------------------------------------------
+
+RING_PREAMBLE = """
+    import jax, numpy as np
+    from repro.compiler.mapper import plan_model
+    from repro.configs import get_config
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models.registry import build_model
+    from repro.serving.engine import LPUEngine, MultiRingEngine
+
+    cfg = get_config('smollm-135m').reduced()
+    plan1 = plan_model(cfg, None, (1,), 'serve', esl_overlap=False,
+                       remat='none', compute_dtype='float32',
+                       param_dtype='float32')
+    m1 = build_model(cfg, plan1)
+    p1, _ = m1.init(jax.random.PRNGKey(0))
+    plan2 = plan_model(cfg, ('model',), (2,), 'serve', esl_overlap=True,
+                       remat='none', compute_dtype='float32',
+                       param_dtype='float32')
+    m2 = build_model(cfg, plan2)
+    p2, _ = m2.init(jax.random.PRNGKey(0))
+    prompts = [[1,2,3,4,5,6,7],[8,9,10,11,12],[13,14,15],[16,17,18,19]]
+    ref = LPUEngine(m1, p1, slots=3, max_seq=64, paged=False).generate(
+        prompts, max_new_tokens=10)
+"""
+
+
+@pytest.mark.slow
+def test_ring_sharded_paged_engine_matches_dense_tp1():
+    """tp=2 shard_map engine (ESL overlap, paged per-rank pools) must
+    produce bit-identical token streams to the tp=1 dense engine, and
+    each rank must hold exactly half the pool bytes."""
+    from tests.util import run_multidevice
+    out = run_multidevice(RING_PREAMBLE + """
+    mesh = make_serving_mesh(tp=2, rings=1)
+    eng = LPUEngine(m2, p2, slots=3, max_seq=64, paged=True,
+                    block_size=16, mesh=mesh)
+    got = eng.generate(prompts, max_new_tokens=10)
+    assert got == ref, (got, ref)
+    assert eng.per_rank_kv_bytes() * 2 == eng.kv_cache_bytes()
+    # dense ring cache too (the contiguous fast path under tp)
+    engd = LPUEngine(m2, p2, slots=3, max_seq=64, paged=False, mesh=mesh)
+    assert engd.generate(prompts, max_new_tokens=10) == ref
+    print('PASS')
+    """, n_devices=2)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_ring_sharded_engine_parity_under_preemption():
+    """A pool too small for the working set forces recompute preemption
+    on the ring engine; the token streams must STILL match the tp=1
+    dense engine (recompute is exact)."""
+    from tests.util import run_multidevice
+    out = run_multidevice(RING_PREAMBLE + """
+    mesh = make_serving_mesh(tp=2, rings=1)
+    eng = LPUEngine(m2, p2, slots=3, max_seq=64, paged=True,
+                    block_size=8, num_blocks=4, mesh=mesh)
+    got = eng.generate(prompts, max_new_tokens=10)
+    assert eng.stats.preemptions > 0, 'pool was meant to force preemption'
+    assert got == ref, (got, ref)
+    print('PASS', eng.stats.preemptions)
+    """, n_devices=2)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_multi_ring_engine_isolated_and_balanced():
+    """2 x (tp=2) sub-ring fleet: disjoint device groups, least-loaded
+    routing, and the merged token streams equal the tp=1 reference."""
+    from tests.util import run_multidevice
+    out = run_multidevice(RING_PREAMBLE + """
+    mesh = make_serving_mesh(tp=2, rings=2)
+    fleet = MultiRingEngine(m2, p2, mesh, ring_size=2, slots=2,
+                            max_seq=64, paged=True, block_size=16)
+    assert fleet.n_rings == 2
+    assert fleet.ring_cfg.validate_disjoint()
+    devs = [set(d.id for d in e.mesh.devices.flat) for e in fleet.engines]
+    assert not (devs[0] & devs[1]), devs
+    got = fleet.generate(prompts, max_new_tokens=10)
+    assert got == ref, (got, ref)
+    assert sorted(fleet.router.routed) == [2, 2]
+    # stats count decode tokens; each request's first token is prefill's
+    assert sum(s.tokens for s in fleet.per_ring_stats()) == 4 * (10 - 1)
+    print('PASS')
+    """, n_devices=4)
+    assert "PASS" in out
+
+
 def test_engine_stats_monitoring(tiny_model):
     model, params = tiny_model
     eng = LPUEngine(model, params, slots=2, max_seq=64)

@@ -36,6 +36,45 @@ def test_decode_layer_kernel_parity(use_kernels):
     assert y.shape == (B, cfg.d_model)
 
 
+def test_decode_layer_paged_matches_dense():
+    """decode_layer against the shared block pool (block tables) must
+    equal the dense per-slot cache path bit-for-bit: the table only
+    redirects where KV tiles live, never what is computed."""
+    cfg = get_config("smollm-135m").reduced()
+    plan = plan_model(cfg, None, (1,), "serve", esl_overlap=False,
+                      remat="none", compute_dtype="float32",
+                      param_dtype="float32")
+    ctx = InitCtx(jax.random.PRNGKey(0), param_dtype=jnp.float32)
+    p = init_layer(ctx, cfg, plan, 0)
+    a = plan.attn
+    B, S, bs = 2, 32, 8
+    T = S // bs
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, cfg.d_model))
+    k0 = jax.random.normal(jax.random.PRNGKey(2), (B, S, a.gp, a.d_head))
+    v0 = jax.random.normal(jax.random.PRNGKey(3), (B, S, a.gp, a.d_head))
+    pos = jnp.asarray([5, 11], jnp.int32)
+    y_ref, c_ref = decode_layer(p, x, {"k": k0, "v": v0}, pos, cfg=cfg,
+                                plan=plan, use_kernels=False)
+    # scatter the dense cache into a pool through per-request tables
+    # (block 0 = null block, requests own disjoint blocks 1..2T)
+    tables = np.arange(1, 2 * T + 1, dtype=np.int32).reshape(B, T)
+    pool_k = jnp.zeros((2 * T + 1, bs, a.gp, a.d_head))
+    pool_v = jnp.zeros((2 * T + 1, bs, a.gp, a.d_head))
+    chunks_k = np.asarray(k0).reshape(B, T, bs, a.gp, a.d_head)
+    chunks_v = np.asarray(v0).reshape(B, T, bs, a.gp, a.d_head)
+    pool_k = pool_k.at[tables].set(chunks_k)
+    pool_v = pool_v.at[tables].set(chunks_v)
+    y_pg, c_pg = decode_layer(p, x, {"k": pool_k, "v": pool_v}, pos,
+                              cfg=cfg, plan=plan, use_kernels=False,
+                              block_table=jnp.asarray(tables))
+    assert np.array_equal(np.asarray(y_pg), np.asarray(y_ref))
+    # the new token's KV landed in the right physical block slot
+    for b in range(B):
+        blk, off = tables[b, int(pos[b]) // bs], int(pos[b]) % bs
+        assert np.array_equal(np.asarray(c_pg["k"][blk, off]),
+                              np.asarray(c_ref["k"][b, int(pos[b])]))
+
+
 def test_stream_bytes_accounting():
     cfg = get_config("deepseek-coder-33b")
     plan = plan_model(cfg, ("data", "model"), (16, 16), "serve")
