@@ -1,15 +1,20 @@
 """Serving-stack benchmark: paged KV pool vs. the dense slot cache.
 
-Drives the LPU engine through a mixed-length request trace twice — once
-with the dense (slots, max_seq) cache, once with the paged block pool —
-and reports the serving-level statistics the paged refactor targets:
+Drives the LPU engine through a mixed-length request trace — dense
+(slots, max_seq) cache, paged pool with the **gather** oracle, and paged
+pool with the **streamed** Pallas kernel — and reports the serving-level
+statistics the paged refactor targets:
 
-* tokens/s and slot occupancy (continuous batching health),
+* tokens/s, ms/token and slot occupancy (continuous batching health),
 * prefill retrace count: with pow2 length buckets the prefill jit traces
   at most log2(max_seq) times, vs. once per distinct prompt length for
   the unbucketed dense baseline,
 * KV bytes: pool bytes (scales with resident tokens) vs. the dense
-  worst-case allocation, plus peak block-pool utilization.
+  worst-case allocation, peak block-pool occupancy, and **KV bytes
+  moved per decode step** — the streamed kernel reads each resident
+  tile once where the gather path reads the pool, writes a contiguous
+  copy and reads it back (3x), the copy the paper's no-materialization
+  decode stream removes.
 
     PYTHONPATH=src python benchmarks/serving_bench.py --requests 16
 
@@ -21,6 +26,10 @@ asserted identical to the tp=1 dense engine.  CPU note: fake devices
 measure *schedule* differences only — wall-clock speedups need ICI.
 
     PYTHONPATH=src python benchmarks/serving_bench.py --tp 2 --rings 2
+
+CI smoke (``--smoke``): shrink the trace, validate the result dict
+(schema + no NaN/inf) and write it to ``--out`` (BENCH_serving.json) so
+the perf-trajectory artifact is produced by CI on every PR.
 """
 from __future__ import annotations
 
@@ -38,6 +47,7 @@ from repro.launch.fake_devices import ensure_host_devices  # noqa: E402
 ensure_host_devices(sys.argv)   # must precede the jax import
 
 import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.compiler.mapper import plan_model  # noqa: E402
@@ -48,13 +58,37 @@ from repro.serving.engine import LPUEngine, MultiRingEngine  # noqa: E402
 
 
 def run_engine(model, params, prompts, *, slots, max_seq, max_new,
-               paged, block_size=0, num_blocks=0):
+               paged, block_size=0, num_blocks=0, paged_kernel="auto"):
     eng = LPUEngine(model, params, slots=slots, max_seq=max_seq,
                     paged=paged, block_size=block_size,
-                    num_blocks=num_blocks)
+                    num_blocks=num_blocks, paged_kernel=paged_kernel)
     outs = eng.generate(prompts, max_new_tokens=max_new)
     assert all(len(o) == max_new for o in outs)
     return eng, outs
+
+
+MLIR_DTYPE = {"float32": "f32", "bfloat16": "bf16", "float16": "f16"}
+
+
+def view_tensor_count(eng) -> int:
+    """MEASURED no-copy check: tensors of the per-request contiguous
+    view shape (slots, max_seq, Gp, dh) in the lowered decode program.
+
+    The gather oracle materializes one per K and V per layer; the
+    streamed kernel must lower with ZERO — if the streamed path ever
+    regresses to gathering, the view shape reappears in its program and
+    the bench (and the CI smoke job) fails.  This is the falsifiable
+    counterpart of the analytic ``kv_moved_bytes_per_step`` formula.
+    """
+    a = eng.plan.attn
+    toks = jnp.zeros((eng.slots, 1), jnp.int32)
+    pos = jnp.zeros((eng.slots,), jnp.int32)
+    tables = jnp.asarray(eng.block_tables)
+    txt = eng._decode.lower(eng.params, eng.cache, toks, pos,
+                            tables).as_text()
+    dt = MLIR_DTYPE[jnp.dtype(eng.plan.cache_dtype).name]
+    sig = f"tensor<{eng.slots}x{eng.max_seq}x{a.gp}x{a.d_head}x{dt}>"
+    return txt.count(sig)
 
 
 def ring_rows(cfg, prompts, dense_outs, args):
@@ -122,6 +156,42 @@ def ring_rows(cfg, prompts, dense_outs, args):
     return rows, ring_stats
 
 
+REQUIRED_ROW_KEYS = {"mode", "tokens_per_s", "ms_per_token", "occupancy",
+                     "decode_steps", "prefills", "prefill_traces",
+                     "preemptions", "kv_bytes", "kv_dense_equiv_bytes",
+                     "kv_moved_bytes_per_step", "view_tensors_in_program"}
+
+
+def validate_bench(out: dict) -> None:
+    """Schema + NaN/inf gate for the CI perf-trajectory artifact."""
+    for key in ("requests", "distinct_prompt_lengths",
+                "bucket_trace_bound_log2", "rows", "same_output"):
+        if key not in out:
+            raise ValueError(f"BENCH schema: missing top-level key {key!r}")
+    if not out["rows"]:
+        raise ValueError("BENCH schema: empty rows")
+    modes = {r["mode"] for r in out["rows"]}
+    for want in ("dense", "paged-gather", "paged-stream"):
+        if want not in modes:
+            raise ValueError(f"BENCH schema: missing row {want!r}")
+    for row in out["rows"]:
+        missing = REQUIRED_ROW_KEYS - set(row)
+        if missing:
+            raise ValueError(
+                f"BENCH schema: row {row.get('mode')!r} missing {missing}")
+
+    def walk(x, path):
+        if isinstance(x, dict):
+            for k, v in x.items():
+                walk(v, f"{path}.{k}")
+        elif isinstance(x, (list, tuple)):
+            for i, v in enumerate(x):
+                walk(v, f"{path}[{i}]")
+        elif isinstance(x, float) and not math.isfinite(x):
+            raise ValueError(f"BENCH schema: non-finite value at {path}")
+    walk(out, "$")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -137,7 +207,17 @@ def main():
     ap.add_argument("--rings", type=int, default=1,
                     help="sub-ring fleet size (per-ring tokens/s rows)")
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: validate the result schema and "
+                         "write it to --out")
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="result file written in --smoke mode")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 6)
+        args.slots = min(args.slots, 2)
+        args.max_new = min(args.max_new, 4)
+        args.max_seq = min(args.max_seq, 64)
 
     cfg = get_config(args.arch).reduced()
     plan = plan_model(cfg, None, (1,), "serve", esl_overlap=False,
@@ -159,23 +239,29 @@ def main():
                                    slots=args.slots, max_seq=args.max_seq,
                                    max_new=args.max_new, paged=False)
     # paged pool sized at half the dense capacity: enough for the trace's
-    # resident tokens, impossible for a dense allocator
+    # resident tokens, impossible for a dense allocator.  Same pool, two
+    # dataflows: the gather oracle (contiguous per-request copy each
+    # step) vs. the streamed Pallas kernel (tiles straight off the pool).
     table_len = args.max_seq // args.block_size
     num_blocks = args.num_blocks or \
         (args.slots * table_len) // 2 + 1
-    paged, paged_outs = run_engine(model, params, prompts,
-                                   slots=args.slots, max_seq=args.max_seq,
-                                   max_new=args.max_new, paged=True,
-                                   block_size=args.block_size,
-                                   num_blocks=num_blocks)
+    engines = [("dense", dense, dense_outs)]
+    for kern in ("gather", "stream"):
+        eng, outs = run_engine(model, params, prompts,
+                               slots=args.slots, max_seq=args.max_seq,
+                               max_new=args.max_new, paged=True,
+                               block_size=args.block_size,
+                               num_blocks=num_blocks, paged_kernel=kern)
+        engines.append((f"paged-{kern}", eng, outs))
 
     bucket_bound = int(math.log2(args.max_seq)) + 1
     rows = []
-    for name, eng in (("dense", dense), ("paged", paged)):
+    for name, eng, outs in engines:
         st = eng.stats
         rows.append({
             "mode": name,
             "tokens_per_s": round(st.tokens_per_s, 1),
+            "ms_per_token": round(1e3 * st.wall / max(st.tokens, 1), 3),
             "occupancy": round(st.occupancy, 3),
             "decode_steps": st.steps,
             "prefills": st.prefills,
@@ -183,6 +269,13 @@ def main():
             "preemptions": st.preemptions,
             "kv_bytes": eng.kv_cache_bytes(),
             "kv_dense_equiv_bytes": eng.dense_equiv_bytes(),
+            "kv_moved_bytes_per_step": eng.kv_bytes_moved_per_step(),
+            "pool_peak_blocks": st.peak_pool_blocks,
+            "pool_blocks": (eng.num_blocks - 1 if eng.paged else 0),
+            "same_output_as_dense": outs == dense_outs,
+            # measured from the lowered program, not the formula
+            "view_tensors_in_program": (view_tensor_count(eng)
+                                        if eng.paged else None),
         })
     scaling_rows, ring_stats = [], []
     if args.tp > 1:
@@ -196,7 +289,7 @@ def main():
         "rows": rows,
         "scaling_rows": scaling_rows,
         "per_ring": ring_stats,
-        "same_output": dense_outs == paged_outs,
+        "same_output": all(r["same_output_as_dense"] for r in rows),
     }
     if args.json:
         print(json.dumps(out, indent=2))
@@ -205,12 +298,17 @@ def main():
               f"({distinct_lengths} distinct prompt lengths), "
               f"slots={args.slots}, max_seq={args.max_seq}")
         for r in rows:
-            print(f"  {r['mode']:>5}: {r['tokens_per_s']:8.1f} tok/s  "
+            occ_pool = (f"  pool {r['pool_peak_blocks']}/{r['pool_blocks']}"
+                        if r["pool_blocks"] else "")
+            print(f"  {r['mode']:>12}: {r['tokens_per_s']:8.1f} tok/s  "
+                  f"{r['ms_per_token']:7.2f} ms/tok  "
                   f"occ {r['occupancy']:.2f}  "
                   f"traces {r['prefill_traces']}  "
                   f"preempt {r['preemptions']}  "
                   f"kv {r['kv_bytes']/1024:.0f} KiB "
-                  f"(dense-equiv {r['kv_dense_equiv_bytes']/1024:.0f} KiB)")
+                  f"(moved/step {r['kv_moved_bytes_per_step']/1024:.0f} "
+                  f"KiB, view tensors "
+                  f"{r['view_tensors_in_program']}){occ_pool}")
         print(f"  bucketed prefill traces <= log2(max_seq)+1 = "
               f"{bucket_bound} (vs {distinct_lengths} distinct lengths); "
               f"outputs identical: {out['same_output']}")
@@ -228,6 +326,23 @@ def main():
     assert rows[1]["prefill_traces"] <= bucket_bound, \
         "bucketed prefill exceeded the log2(max_seq) trace bound"
     assert out["same_output"], "paged output diverged from dense"
+    by_mode = {r["mode"]: r for r in rows}
+    assert by_mode["paged-stream"]["kv_moved_bytes_per_step"] < \
+        by_mode["paged-gather"]["kv_moved_bytes_per_step"], \
+        "streamed kernel must move strictly fewer KV bytes than gather"
+    # the MEASURED gate: the streamed decode program must contain zero
+    # per-request contiguous view tensors while the gather oracle
+    # materializes them (2 per attention layer)
+    assert by_mode["paged-stream"]["view_tensors_in_program"] == 0, \
+        "streamed decode program materialized a per-request KV view"
+    assert by_mode["paged-gather"]["view_tensors_in_program"] > 0, \
+        "gather oracle no longer materializes the view (shape drift? " \
+        "update view_tensor_count)"
+    if args.smoke:
+        validate_bench(out)
+        Path(args.out).write_text(json.dumps(out, indent=2),
+                                  encoding="utf-8")
+        print(f"[serving_bench] smoke OK -> {args.out}")
     return out
 
 

@@ -69,6 +69,20 @@ class AttnPlan:
         return m - base
 
     @property
+    def block_regular(self) -> bool:
+        """True when every rank's local q->kv map is ``i // gs`` with one
+        uniform group size ``gs = q_per_rank // kv_per_rank`` — the layout
+        the fused decode kernels assume (q heads reshape to (G, gs) with
+        no per-head gather).  Holds for the sharded case (n_kv >= tp) and
+        for duplicated shards with one kv head per rank; only dup > 1
+        with multiple kv heads AND padding misalignment breaks it."""
+        if self.q_per_rank % max(self.kv_per_rank, 1):
+            return False
+        gs = self.q_per_rank // self.kv_per_rank
+        want = np.repeat(np.arange(self.kv_per_rank, dtype=np.int32), gs)
+        return bool((self.q_to_kv_local == want[None, :]).all())
+
+    @property
     def waste_q(self) -> float:
         real = sum(1 for o in self.q_orig if o >= 0)
         return self.hp / max(real, 1)

@@ -27,7 +27,9 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                paged_decode_attention,
+                                                resolve_paged_kernel)
 from repro.kernels.gemv.ops import gemv
 from repro.models.common import apply_norm, apply_rope
 
@@ -42,7 +44,8 @@ def _mm(x2d: jax.Array, w: jax.Array, b: Optional[jax.Array], *,
 def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
                  positions: jax.Array, *, cfg, plan,
                  use_kernels: bool = True, interpret: bool = True,
-                 block_table: Optional[jax.Array] = None
+                 block_table: Optional[jax.Array] = None,
+                 paged_kernel: str = "auto"
                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decoder layer, one token, single device (tp folded outside).
 
@@ -51,10 +54,14 @@ def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
 
     Paged mode (``block_table`` (B, T) given): cache k/v are the shared
     block pool (N, bs, G, dh).  The new token's KV scatters into
-    physical block ``table[b, pos // bs]`` at offset ``pos % bs``, and
-    attention consumes the per-request contiguous view gathered through
-    the table — the serving engine's pool layout, tp-folded just like
-    the weights (each rank holds its head shard of every block).
+    physical block ``table[b, pos // bs]`` at offset ``pos % bs`` — the
+    serving engine's pool layout, tp-folded just like the weights (each
+    rank holds its head shard of every block).  ``paged_kernel``:
+    ``"stream"`` keeps the chain gather-free — the paged kernel consumes
+    KV tiles straight from the updated pool through the block table;
+    ``"gather"`` materializes the per-request contiguous view first (the
+    reference oracle); ``"auto"`` streams when the stored GQA layout is
+    block-regular.
     """
     a = plan.attn
     B, D = x.shape
@@ -90,9 +97,21 @@ def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
         off = positions % bs_blk
         kc = cache["k"].at[blk, off].set(k_new.astype(cache["k"].dtype))
         vc = cache["v"].at[blk, off].set(v_new.astype(cache["v"].dtype))
-        T = block_table.shape[1]
-        k_view = kc[block_table].reshape(B, T * bs_blk, *kc.shape[2:])
-        v_view = vc[block_table].reshape(B, T * bs_blk, *vc.shape[2:])
+        mode = resolve_paged_kernel(plan, bs_blk, paged_kernel,
+                                    interpret=interpret)
+        if mode == "stream":
+            # gather-free: the kernel's scalar-prefetched table resolves
+            # each KV tile's pool address — the streamed chain never
+            # materializes a per-request contiguous copy
+            attn = paged_decode_attention(
+                q, kc, vc, block_table, positions + 1,
+                use_pallas=use_kernels, interpret=interpret)
+            attn_done = True
+        else:
+            T = block_table.shape[1]
+            k_view = kc[block_table].reshape(B, T * bs_blk, *kc.shape[2:])
+            v_view = vc[block_table].reshape(B, T * bs_blk, *vc.shape[2:])
+            attn_done = False
     else:
         def upd(c, n, pos):
             return jax.lax.dynamic_update_slice_in_dim(
@@ -100,9 +119,11 @@ def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
         kc = jax.vmap(upd)(cache["k"], k_new, positions)
         vc = jax.vmap(upd)(cache["v"], v_new, positions)
         k_view, v_view = kc, vc
+        attn_done = False
 
-    attn = decode_attention(q, k_view, v_view, positions + 1,
-                            use_pallas=use_kernels, interpret=interpret)
+    if not attn_done:
+        attn = decode_attention(q, k_view, v_view, positions + 1,
+                                use_pallas=use_kernels, interpret=interpret)
     wo = p["attn"]["wo"].reshape(qpr * dh, D)
     x = x + _mm(attn.reshape(B, -1), wo, None, use_kernels=use_kernels,
                 interpret=interpret)

@@ -60,13 +60,23 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, t_blocks: int,
-                         block_s: int, scale: float):
+def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, *rest,
+                         t_blocks: int, block_s: int, scale: float):
     """Paged variant: same online-softmax stream as ``_decode_kernel`` but
     KV tiles are fetched through the block table (scalar-prefetched, so the
     DMA address is known before the body runs — the LPU's address-generator
-    indirection).  Tile ``t`` covers logical positions [t*bs, (t+1)*bs)."""
+    indirection).  Tile ``t`` covers logical positions [t*bs, (t+1)*bs).
+
+    With the optional ``kn_ref/vn_ref`` inputs (decode streaming: the cache
+    is read *pre-update*), the just-generated token's K/V is folded into
+    the online-softmax carry after the last pool tile — the model path's
+    read-then-scatter contract, so the pool is never copied to append one
+    row."""
+    fold_new = len(rest) == 6
+    if fold_new:
+        kn_ref, vn_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     t = pl.program_id(2)
 
@@ -97,6 +107,19 @@ def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(t == t_blocks - 1)
     def _flush():
+        if fold_new:
+            kn = kn_ref[0].astype(jnp.float32)          # (1, dh)
+            vn = vn_ref[0].astype(jnp.float32)
+            s_self = jax.lax.dot_general(
+                q, kn, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)     # (gs, 1)
+            m_p = m_ref[...]
+            m_f = jnp.maximum(m_p, s_self)
+            p_self = jnp.exp(s_self - m_f)
+            c = jnp.exp(m_p - m_f)
+            l_ref[...] = l_ref[...] * c + p_self
+            acc_ref[...] = acc_ref[...] * c + p_self * vn
+            m_ref[...] = m_f
         o_ref[0] = (acc_ref[...] /
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
@@ -105,31 +128,47 @@ def paged_decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
                                   v_pages: jax.Array,
                                   block_tables: jax.Array,
                                   lengths: jax.Array, *,
+                                  k_new: jax.Array = None,
+                                  v_new: jax.Array = None,
                                   interpret: bool = True) -> jax.Array:
     """q: (B,H,dh); k_pages,v_pages: (N,bs,G,dh) shared pool with H = G*gs;
     block_tables: (B,T) physical block per logical block; lengths: (B,).
     Returns (B,H,dh).  The block table rides scalar prefetch so each KV
-    tile's pool address is resolved before its DMA issues."""
+    tile's pool address is resolved before its DMA issues.
+
+    ``k_new/v_new`` ((B,G,dh), both or neither): the current token's K/V,
+    folded into the softmax carry *after* the streamed pool tiles — used
+    by the decode path that reads the cache pre-update and lets the
+    caller scatter the new row into the pool afterwards."""
     B, H, dh = q.shape
     N, bs, G, _ = k_pages.shape
     T = block_tables.shape[1]
     assert H % G == 0, (H, G)
+    assert (k_new is None) == (v_new is None)
     gs = H // G
     qg = q.reshape(B * G, gs, dh)
 
     kernel = functools.partial(_paged_decode_kernel, t_blocks=T, block_s=bs,
                                scale=1.0 / math.sqrt(dh))
+    in_specs = [
+        pl.BlockSpec((1, gs, dh),
+                     lambda b, g, t, lens, tbl: (b * G + g, 0, 0)),
+        pl.BlockSpec((1, bs, 1, dh),
+                     lambda b, g, t, lens, tbl: (tbl[b, t], 0, g, 0)),
+        pl.BlockSpec((1, bs, 1, dh),
+                     lambda b, g, t, lens, tbl: (tbl[b, t], 0, g, 0)),
+    ]
+    operands = [lengths, block_tables, qg, k_pages, v_pages]
+    if k_new is not None:
+        new_spec = pl.BlockSpec((1, 1, dh),
+                                lambda b, g, t, lens, tbl: (b * G + g, 0, 0))
+        in_specs += [new_spec, new_spec]
+        operands += [k_new.reshape(B * G, 1, dh),
+                     v_new.reshape(B * G, 1, dh)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, G, T),
-        in_specs=[
-            pl.BlockSpec((1, gs, dh),
-                         lambda b, g, t, lens, tbl: (b * G + g, 0, 0)),
-            pl.BlockSpec((1, bs, 1, dh),
-                         lambda b, g, t, lens, tbl: (tbl[b, t], 0, g, 0)),
-            pl.BlockSpec((1, bs, 1, dh),
-                         lambda b, g, t, lens, tbl: (tbl[b, t], 0, g, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, gs, dh),
                                lambda b, g, t, lens, tbl: (b * G + g, 0, 0)),
         scratch_shapes=[
@@ -143,7 +182,7 @@ def paged_decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B * G, gs, dh), q.dtype),
         interpret=interpret,
-    )(lengths, block_tables, qg, k_pages, v_pages)
+    )(*operands)
     return out.reshape(B, H, dh)
 
 

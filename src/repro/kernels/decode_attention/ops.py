@@ -22,6 +22,61 @@ LANE = 128
 VMEM_BUDGET = 32 * 2 ** 20
 
 
+def default_interpret() -> bool:
+    """Pallas interpret mode off-TPU (CPU CI runs the same kernel code)."""
+    return jax.default_backend() != "tpu"
+
+
+def paged_stream_supported(plan, block_size: Optional[int] = None,
+                           interpret: Optional[bool] = None) -> bool:
+    """True when paged decode can stream through the Pallas kernel.
+
+    Two conditions: the plan's stored GQA layout must be block-regular
+    (the kernel maps q head ``h`` to kv head ``h // gs`` with no
+    per-head gather), and — compiled on TPU only — the KV tile must be
+    LANE-aligned (``block_size`` and ``d_head`` multiples of 128).
+    ``interpret=None`` derives the mode from the backend, matching what
+    the kernel call will actually do.  Resolving eligibility *here*
+    keeps the dispatch honest: a misaligned "stream" request resolves
+    to gather up front (and is accounted as gather) instead of
+    silently falling back inside the kernel wrapper while the engine
+    reports streamed statistics."""
+    a = plan.attn
+    if a is None or not a.block_regular:
+        return False
+    if interpret is None:
+        interpret = default_interpret()
+    if block_size is not None and not interpret and \
+            (block_size % LANE or a.d_head % LANE):
+        return False
+    return True
+
+
+def resolve_paged_kernel(plan, block_size: int, requested: str,
+                         interpret: Optional[bool] = None) -> str:
+    """Resolve a ``paged_kernel`` request to the dataflow that will run.
+
+    ``"auto"`` becomes ``"stream"`` when :func:`paged_stream_supported`
+    allows it, else ``"gather"``; an explicit ``"stream"`` on an
+    ineligible plan raises instead of silently degrading.  Every
+    dispatch site (model decode, streamline decode_layer, the serving
+    engine) resolves through this one function so they can never
+    disagree."""
+    if requested not in ("auto", "stream", "gather"):
+        raise ValueError(f"paged_kernel={requested!r} not in "
+                         "('auto', 'stream', 'gather')")
+    ok = paged_stream_supported(plan, block_size, interpret)
+    if requested == "auto":
+        return "stream" if ok else "gather"
+    if requested == "stream" and not ok:
+        raise ValueError(
+            "paged_kernel='stream' needs a block-regular stored GQA "
+            "layout and (compiled on TPU) LANE-aligned block_size/"
+            f"d_head; plan for {plan.arch} with block_size={block_size} "
+            "cannot stream (use 'gather' or 'auto')")
+    return requested
+
+
 def plan_block_s(S: int, dh: int, gs: int, dtype_bytes: int = 2) -> int:
     bs = min(S, 4096)
     while bs > LANE:
@@ -53,7 +108,10 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 @partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, block_tables: jax.Array,
-                           lengths: jax.Array, *, use_pallas: bool = True,
+                           lengths: jax.Array, *,
+                           k_new: Optional[jax.Array] = None,
+                           v_new: Optional[jax.Array] = None,
+                           use_pallas: bool = True,
                            interpret: bool = True) -> jax.Array:
     """Paged decode attention over a shared block pool.
 
@@ -61,15 +119,36 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     lengths: (B,) -> (B,H,dh).  The pallas path streams KV tiles straight
     from the pool through the block-table indirection (no contiguous copy);
     the fallback gathers the per-request view and reuses the dense oracle.
+
+    ``k_new/v_new`` ((B,G,dh)): the current token's K/V, attended *in
+    addition to* the ``lengths`` resident positions — the pool is read
+    pre-update and the caller scatters the new row afterwards, so decode
+    never rewrites (or copies) the pool to append one token.  The LANE
+    alignment guard only applies to compiled TPU tiles; interpret mode
+    (CPU CI) streams any block size.
     """
     B, H, dh = q.shape
     bs, G = k_pages.shape[1], k_pages.shape[2]
-    if (not use_pallas) or H % G or bs % LANE or dh % LANE:
+    misaligned = (bs % LANE or dh % LANE) and not interpret
+    if (not use_pallas) or H % G or misaligned:
         gs = max(H // G, 1)
         ke = jnp.repeat(gather_kv_pages(k_pages, block_tables), gs,
                         axis=2)[:, :, :H]
         ve = jnp.repeat(gather_kv_pages(v_pages, block_tables), gs,
                         axis=2)[:, :, :H]
+        if k_new is not None:
+            # oracle fold: mask-scatter the new token at its position in
+            # the gathered view, extend the valid length by one
+            kn = jnp.repeat(k_new, gs, axis=1)[:, :H]
+            vn = jnp.repeat(v_new, gs, axis=1)[:, :H]
+
+            def put(view, row, pos):
+                return jax.lax.dynamic_update_slice(
+                    view, row[None].astype(view.dtype), (pos, 0, 0))
+            ke = jax.vmap(put)(ke, kn, lengths)
+            ve = jax.vmap(put)(ve, vn, lengths)
+            return decode_attention_ref(q, ke, ve, lengths + 1)
         return decode_attention_ref(q, ke, ve, lengths)
     return paged_decode_attention_pallas(q, k_pages, v_pages, block_tables,
-                                         lengths, interpret=interpret)
+                                         lengths, k_new=k_new, v_new=v_new,
+                                         interpret=interpret)

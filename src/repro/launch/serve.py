@@ -16,7 +16,9 @@ Paged-KV knobs: ``--block-size`` (tokens per KV block), ``--num-blocks``
 (pool size incl. the reserved null block; 0 = dense-equivalent capacity),
 ``--kv-budget-mb`` (size the pool from a per-rank HBM budget instead),
 ``--min-bucket`` (smallest power-of-two prefill bucket), ``--dense``
-(force the contiguous per-slot cache).
+(force the contiguous per-slot cache), ``--paged-kernel
+{auto,stream,gather}`` (stream KV tiles through the Pallas paged kernel
+vs. materialize the contiguous gather view — see docs/serving.md).
 """
 from __future__ import annotations
 
@@ -68,6 +70,11 @@ def main():
                          "when --num-blocks is 0)")
     ap.add_argument("--min-bucket", type=int, default=16,
                     help="smallest power-of-two prefill bucket")
+    ap.add_argument("--paged-kernel", default="auto",
+                    choices=("auto", "stream", "gather"),
+                    help="paged decode dataflow: stream KV tiles through "
+                         "the Pallas kernel (no per-request copy), gather "
+                         "the contiguous view (reference oracle), or auto")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -91,7 +98,8 @@ def main():
                      block_size=args.block_size,
                      num_blocks=args.num_blocks,
                      kv_budget_bytes=args.kv_budget_mb << 20,
-                     min_bucket=args.min_bucket)
+                     min_bucket=args.min_bucket,
+                     paged_kernel=args.paged_kernel)
     if rings > 1:
         engine = MultiRingEngine(model, params, mesh, ring_size=tp,
                                  **engine_kw)
@@ -111,7 +119,7 @@ def main():
 
     outs = engine.generate(prompts, max_new_tokens=args.max_new,
                            params=sp, stream_cb=cb)
-    mode = "paged" if first.paged else "dense"
+    mode = f"paged/{first.paged_kernel}" if first.paged else "dense"
     if rings > 1:
         print(f"[serve] {len(outs)} requests over {rings} sub-rings "
               f"(tp={tp} each), routed {engine.router.routed}")

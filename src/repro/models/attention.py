@@ -29,9 +29,18 @@ from jax import lax
 
 from repro.core import esl
 from repro.core.dist import AxisEnv, model_rank
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.decode_attention.ops import (paged_decode_attention,
+                                                paged_stream_supported,
+                                                resolve_paged_kernel)
 from repro.models.common import InitCtx, apply_rope, big_neg
 
 Params = Dict[str, Any]
+
+# paged_stream_supported / resolve_paged_kernel are re-exported here for
+# model-level callers (engine, tests); they live next to the kernel in
+# kernels/decode_attention/ops.py so every dispatch site shares ONE
+# eligibility rule.
 
 
 # ---------------------------------------------------------------------------
@@ -261,7 +270,8 @@ def prefill_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
 
 def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                      cache: Dict[str, jax.Array], positions: jax.Array,
-                     block_table: Optional[jax.Array] = None
+                     block_table: Optional[jax.Array] = None,
+                     paged_kernel: str = "auto"
                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token generation step against the KV cache.
 
@@ -271,13 +281,27 @@ def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
     activation vector against streamed weights + streamed KV.
 
     Paged mode (``block_table`` given): cache['k'/'v'] is the shared block
-    pool (N, bs, kpr, dh); the per-request contiguous view is gathered
-    through the (B, T) block table, masked by ``positions`` as usual (null
-    blocks past the valid length never contribute).  Under ring tp the
-    pool arrives head-sharded (kpr = Gp/tp local heads) with the SAME
-    block ids on every rank, so the replicated table drives all shards —
-    paged decode composes with the ESL ring, but not with kv-seq
-    sharding (the pool's block dim already replaces the seq dim).
+    pool (N, bs, kpr, dh).  ``paged_kernel`` selects the dataflow:
+
+    * ``"stream"`` — the Pallas paged kernel streams KV tiles straight
+      from the pool via the scalar-prefetched block table; the new
+      token's K/V folds into the online-softmax carry in-kernel.  No
+      per-request contiguous view is EVER materialized — the paper's
+      no-copy decode stream (Fig. 3b).
+    * ``"gather"`` — the reference oracle: materialize the contiguous
+      (B, T*bs, ...) view through the table, then run the same chunked
+      flash decode as the dense cache (an O(resident-tokens) HBM copy
+      per layer per step — kept as the bit-trustworthy baseline).
+    * ``"auto"`` — stream when the stored GQA layout allows it
+      (:func:`paged_stream_supported`), else gather.
+
+    Both modes mask by ``positions`` (null blocks past the valid length
+    never contribute) and return the same pre-update cache contract: the
+    caller scatters (k_new, v_new) into the pool afterwards.  Under ring
+    tp the pool arrives head-sharded (kpr = Gp/tp local heads) with the
+    SAME block ids on every rank, so the replicated table drives all
+    shards — paged decode composes with the ESL ring, but not with
+    kv-seq sharding (the pool's block dim already replaces the seq dim).
     """
     a = plan.attn
     q, k_new, v_new = qkv_proj(p, x, env, plan)
@@ -289,6 +313,18 @@ def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
     if block_table is not None:
         assert env.kv_seq_axis is None, \
             "paged KV shards heads over the model ring, not the seq axis"
+        mode = resolve_paged_kernel(plan, kc.shape[1], paged_kernel)
+        if mode == "stream":
+            out = paged_decode_attention(
+                q[:, 0], kc, vc, block_table, positions,
+                k_new=k_new[:, 0], v_new=v_new[:, 0],
+                use_pallas=True,
+                interpret=da_ops.default_interpret())[:, None]
+            updates = {"k_new": k_new.astype(kc.dtype),
+                       "v_new": v_new.astype(vc.dtype),
+                       "pos": positions,
+                       "mask": jnp.ones(positions.shape, bool)}
+            return out_proj(p, out, env, plan), updates
         B, T = block_table.shape
         bs = kc.shape[1]
         kc = kc[block_table].reshape(B, T * bs, kc.shape[2], kc.shape[3])

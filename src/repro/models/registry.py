@@ -53,7 +53,8 @@ class Model:
 
     def forward(self, params: Params, tokens: jax.Array, *, env: AxisEnv,
                 mode: str, positions=None, cache=None, frames=None,
-                patch_embeds=None, block_tables=None, gather_fn=None):
+                patch_embeds=None, block_tables=None, paged_kernel="auto",
+                gather_fn=None):
         if self.cfg.family == "encdec":
             return wh.forward_encdec(
                 params, tokens, cfg=self.cfg, plan=self.plan, env=env,
@@ -62,7 +63,8 @@ class Model:
         return tf.forward(
             params, tokens, cfg=self.cfg, plan=self.plan, env=env, mode=mode,
             positions=positions, cache=cache, patch_embeds=patch_embeds,
-            block_tables=block_tables, gather_fn=gather_fn)
+            block_tables=block_tables, paged_kernel=paged_kernel,
+            gather_fn=gather_fn)
 
     # ---- decode cache -----------------------------------------------------
 

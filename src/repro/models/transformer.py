@@ -226,7 +226,8 @@ def _norm(pn, x, cfg, plan, env):
 def apply_layer(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                 layer_idx: int, positions: jax.Array, mode: str,
                 cache: Optional[Params] = None,
-                block_tables: Optional[jax.Array] = None
+                block_tables: Optional[jax.Array] = None,
+                paged_kernel: str = "auto"
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.float32(0.0)
@@ -256,7 +257,7 @@ def apply_layer(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
             h, kv = attn_mod.decode_attention(
                 p["attn"], h_in, cfg=cfg, plan=plan, env=env,
                 cache=cache, positions=positions,
-                block_table=block_tables)
+                block_table=block_tables, paged_kernel=paged_kernel)
             new_cache = kv
         elif mode == "prefill":
             h, kv = attn_mod.prefill_attention(
@@ -287,7 +288,8 @@ def apply_layer(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
 def apply_super_block(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                       positions: jax.Array, mode: str,
                       cache: Optional[Params] = None,
-                      block_tables: Optional[jax.Array] = None):
+                      block_tables: Optional[jax.Array] = None,
+                      paged_kernel: str = "auto"):
     sb = super_block_size(cfg)
     aux_total = jnp.float32(0.0)
     new_cache: Dict[str, Any] = {}
@@ -296,7 +298,8 @@ def apply_super_block(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
         x, cj2, aux = apply_layer(p[f"l{j}"], x, cfg=cfg, plan=plan, env=env,
                                   layer_idx=j, positions=positions,
                                   mode=mode, cache=cj,
-                                  block_tables=block_tables)
+                                  block_tables=block_tables,
+                                  paged_kernel=paged_kernel)
         if cache is not None:
             new_cache[f"l{j}"] = cj2
         aux_total = aux_total + aux
@@ -361,6 +364,7 @@ def forward(params: Params, tokens: jax.Array, *, cfg, plan, env: AxisEnv,
             cache: Optional[Params] = None,
             patch_embeds: Optional[jax.Array] = None,
             block_tables: Optional[jax.Array] = None,
+            paged_kernel: str = "auto",
             gather_fn=None):
     """Shared forward.  ``gather_fn(subtree_path, subtree)`` applies FSDP
     gathering (injected by the step builder; identity in smoke mode).
@@ -430,7 +434,8 @@ def forward(params: Params, tokens: jax.Array, *, cfg, plan, env: AxisEnv,
                 cache_st)
             xc, upd, aux = apply_super_block(
                 bp, xc, cfg=cfg, plan=plan, env=env, positions=positions,
-                mode=mode, cache=sl, block_tables=block_tables)
+                mode=mode, cache=sl, block_tables=block_tables,
+                paged_kernel=paged_kernel)
             cache_st = _scatter_cache_updates(cache_st, upd, idx,
                                               seq_sharded, block_tables)
             return (xc, auxc + aux, cache_st), None

@@ -16,10 +16,13 @@ and the paged pool compose:
 * **KV cache** — paged by default for attention-only stacks: a shared
   pool of fixed-size blocks with per-request block tables
   (:mod:`repro.serving.kv_cache`), so the *persistent* cache scales
-  with resident tokens instead of slots x max_seq.  (The jnp decode
-  path still gathers a contiguous per-request view each step; the
-  gather-free variant is the paged pallas kernel in
-  ``kernels/decode_attention``, not yet wired into the model path.)
+  with resident tokens instead of slots x max_seq.  Decode **streams**
+  KV tiles straight from the pool through the scalar-prefetched paged
+  Pallas kernel (``paged_kernel="stream"``, the default wherever the
+  stored GQA layout allows): no contiguous per-request view is ever
+  materialized.  ``paged_kernel="gather"`` keeps the old
+  copy-then-attend path as the reference oracle (bit-trustworthy, 3x
+  the KV bytes moved — see :meth:`LPUEngine.kv_bytes_moved_per_step`).
   The dense per-slot cache remains the contiguous fast path
   (``paged=False``, and the automatic fallback for recurrent-state
   families).
@@ -67,6 +70,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.compat import shard_map
 from repro.core.dist import make_axis_env
 from repro.core.rings import reconfigure, submeshes
+from repro.kernels.decode_attention.ops import resolve_paged_kernel
 from repro.serving.kv_cache import (LANE, BlockPool, cache_bytes,
                                     per_rank_block_bytes,
                                     pool_blocks_for_budget,
@@ -110,6 +114,7 @@ class EngineStats:
     preemptions: int = 0
     prefill_traces: int = 0       # distinct prefill buckets traced
     prefills: int = 0             # total prefill launches (incl. resume)
+    peak_pool_blocks: int = 0     # high-water block-pool occupancy
 
     @property
     def tokens_per_s(self) -> float:
@@ -136,7 +141,8 @@ class LPUEngine:
                  rng: Optional[jax.Array] = None,
                  paged: Optional[bool] = None, block_size: int = 0,
                  num_blocks: int = 0, min_bucket: int = 16,
-                 mesh=None, kv_budget_bytes: int = 0):
+                 mesh=None, kv_budget_bytes: int = 0,
+                 paged_kernel: str = "auto"):
         self.model = model
         self.cfg = model.cfg
         self.plan = model.plan
@@ -160,6 +166,9 @@ class LPUEngine:
         if paged is None:
             paged = model.supports_paged_kv()
         self.paged = paged
+        if paged_kernel not in ("auto", "stream", "gather"):
+            raise ValueError(f"paged_kernel={paged_kernel!r} not in "
+                             "('auto', 'stream', 'gather')")
         # pow2 prefill buckets pad the prompt with token 0; attention
         # masks padded KV by valid length, but recurrent state (mamba /
         # rwkv) folds every position in — those families prefill at the
@@ -195,6 +204,17 @@ class LPUEngine:
             pool = None
             self.cache = model.init_cache(slots, max_seq)
             self.block_tables = None
+        # paged decode dataflow: "stream" runs the Pallas paged kernel
+        # straight off the pool (scalar-prefetched block table, no
+        # contiguous per-request copy); "gather" keeps the materialized
+        # (B, T*bs) view as the reference oracle; "auto" streams
+        # whenever the stored GQA layout (and, compiled on TPU, the
+        # tile alignment) allows it.  Resolved AFTER block_size so the
+        # choice — and the kv_bytes_moved accounting keyed off it — is
+        # what the decode program will actually execute.
+        self.paged_kernel = (resolve_paged_kernel(
+            self.plan, self.block_size, paged_kernel) if self.paged
+            else None)
         self.sched = Scheduler(slots, max_seq, pool, min_bucket)
         self.stats = EngineStats()
         self._results: Dict[int, List[int]] = {}
@@ -213,7 +233,8 @@ class LPUEngine:
     def _decode_fn(self, params, cache, tokens, positions, tables):
         logits, new_cache, _ = self.model.forward(
             params, tokens, env=self.env, mode="decode",
-            positions=positions, cache=cache, block_tables=tables)
+            positions=positions, cache=cache, block_tables=tables,
+            paged_kernel=self.paged_kernel or "gather")
         return logits[:, -1], new_cache
 
     def _prefill_fn(self, params, tokens, true_len):
@@ -419,6 +440,9 @@ class LPUEngine:
                 finished.append(done)
         self.sched.ensure_decode_capacity()     # may preempt (recompute)
         self.stats.preemptions = self.sched.preemptions
+        if self.sched.pool is not None:
+            self.stats.peak_pool_blocks = max(self.stats.peak_pool_blocks,
+                                              self.sched.pool.num_used)
         if self.sched.num_active() == 0:
             return finished
         self._refresh_tables()
@@ -491,6 +515,23 @@ class LPUEngine:
     def pending_load(self) -> int:
         """Outstanding tokens (queued + active) — the router's signal."""
         return self.sched.pending_tokens()
+
+    def kv_bytes_moved_per_step(self) -> int:
+        """Analytic KV bytes MOVED through HBM per decode step (all ranks).
+
+        * dense / streamed-paged: attention reads each resident KV tile
+          exactly once (``V`` = the table-span view bytes); nothing is
+          copied.
+        * gather-paged: the contiguous per-request view is materialized
+          first — read the pool span, write the view, then attention
+          reads the view back: ``3 * V``.  This is the O(resident-tokens)
+          copy per layer per token the streamed kernel removes.
+        """
+        a = self.plan.attn
+        itemsize = jnp.dtype(self.plan.cache_dtype).itemsize
+        v = 2 * self.cfg.n_layers * self.slots * self.table_len \
+            * self.block_size * a.gp * a.d_head * itemsize
+        return 3 * v if self.paged_kernel == "gather" else v
 
     def dense_equiv_bytes(self) -> int:
         """Bytes a dense (slots, max_seq) cache of this model would take."""

@@ -7,7 +7,11 @@ http(s) links and bare in-page anchors are skipped — CI has no network).
 Also verifies the `file:line` anchors used by docs/ARCHITECTURE.md:
 the file part must exist and the line number must be within the file.
 
-    python tools/check_links.py README.md docs/
+CHANGES.md and ISSUE.md are checked by default (and by the docs CI job)
+so stale `file:line` references in the PR log rot loudly instead of
+silently.
+
+    python tools/check_links.py README.md docs/ CHANGES.md ISSUE.md
 """
 from __future__ import annotations
 
@@ -16,8 +20,8 @@ import sys
 from pathlib import Path
 
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-FILE_LINE = re.compile(r"`((?:src|tests|benchmarks|examples)/[\w/.-]+"
-                       r"\.(?:py|md)):(\d+)`")
+FILE_LINE = re.compile(r"`((?:src|tests|benchmarks|examples|tools|docs)"
+                       r"/[\w/.-]+\.(?:py|md|yml)):(\d+)`")
 
 
 def md_files(args):
@@ -58,7 +62,7 @@ def check(root: Path, files) -> int:
 
 
 def main() -> int:
-    args = sys.argv[1:] or ["README.md", "docs"]
+    args = sys.argv[1:] or ["README.md", "docs", "CHANGES.md", "ISSUE.md"]
     root = Path.cwd()
     files = list(md_files(args))
     bad = check(root, files)
