@@ -14,7 +14,17 @@ statistics the paged refactor targets:
   moved per decode step** — the streamed kernel reads each resident
   tile once where the gather path reads the pool, writes a contiguous
   copy and reads it back (3x), the copy the paper's no-materialization
-  decode stream removes.
+  decode stream removes,
+* **host-sync accounting (synced vs fused)** — the paper's C1 on-chip
+  sampling contrast: the ``paged-stream-synced`` row ships the full
+  (slots, vocab) logits row to the host every token (O(vocab)
+  bytes-to-host per token, one blocking sync per step), the fused rows
+  sample in-jit and read back only int32 token ids (O(slots) bytes per
+  token), and ``paged-stream-fused-sN`` additionally runs N decode
+  steps per sync through one lax.scan window — host syncs drop ~Nx.
+  Each row also records the KV stream tile (``block_s``, overridable
+  with ``--block-s``) next to the ``plan_block_s`` recommendation so
+  real-hardware sweeps can tune the tile against the planner.
 
     PYTHONPATH=src python benchmarks/serving_bench.py --requests 16
 
@@ -58,10 +68,13 @@ from repro.serving.engine import LPUEngine, MultiRingEngine  # noqa: E402
 
 
 def run_engine(model, params, prompts, *, slots, max_seq, max_new,
-               paged, block_size=0, num_blocks=0, paged_kernel="auto"):
+               paged, block_size=0, num_blocks=0, paged_kernel="auto",
+               sampling="fused", steps_per_sync=1, block_s=0):
     eng = LPUEngine(model, params, slots=slots, max_seq=max_seq,
                     paged=paged, block_size=block_size,
-                    num_blocks=num_blocks, paged_kernel=paged_kernel)
+                    num_blocks=num_blocks, paged_kernel=paged_kernel,
+                    sampling=sampling, steps_per_sync=steps_per_sync,
+                    block_s=block_s)
     outs = eng.generate(prompts, max_new_tokens=max_new)
     assert all(len(o) == max_new for o in outs)
     return eng, outs
@@ -79,13 +92,11 @@ def view_tensor_count(eng) -> int:
     regresses to gathering, the view shape reappears in its program and
     the bench (and the CI smoke job) fails.  This is the falsifiable
     counterpart of the analytic ``kv_moved_bytes_per_step`` formula.
+    Lowered via ``lower_decode_text``, so it inspects the program the
+    engine actually dispatches (fused window or host logits step).
     """
     a = eng.plan.attn
-    toks = jnp.zeros((eng.slots, 1), jnp.int32)
-    pos = jnp.zeros((eng.slots,), jnp.int32)
-    tables = jnp.asarray(eng.block_tables)
-    txt = eng._decode.lower(eng.params, eng.cache, toks, pos,
-                            tables).as_text()
+    txt = eng.lower_decode_text()
     dt = MLIR_DTYPE[jnp.dtype(eng.plan.cache_dtype).name]
     sig = f"tensor<{eng.slots}x{eng.max_seq}x{a.gp}x{a.d_head}x{dt}>"
     return txt.count(sig)
@@ -159,7 +170,11 @@ def ring_rows(cfg, prompts, dense_outs, args):
 REQUIRED_ROW_KEYS = {"mode", "tokens_per_s", "ms_per_token", "occupancy",
                      "decode_steps", "prefills", "prefill_traces",
                      "preemptions", "kv_bytes", "kv_dense_equiv_bytes",
-                     "kv_moved_bytes_per_step", "view_tensors_in_program"}
+                     "kv_moved_bytes_per_step", "view_tensors_in_program",
+                     "sampling", "steps_per_sync", "host_syncs",
+                     "prefill_syncs", "syncs_per_token",
+                     "bytes_to_host_per_token", "overrun_tokens",
+                     "block_s", "planned_block_s"}
 
 
 def validate_bench(out: dict) -> None:
@@ -171,9 +186,13 @@ def validate_bench(out: dict) -> None:
     if not out["rows"]:
         raise ValueError("BENCH schema: empty rows")
     modes = {r["mode"] for r in out["rows"]}
-    for want in ("dense", "paged-gather", "paged-stream"):
+    for want in ("dense", "paged-gather", "paged-stream",
+                 "paged-stream-synced"):
         if want not in modes:
             raise ValueError(f"BENCH schema: missing row {want!r}")
+    if not any(m.startswith("paged-stream-fused-s") for m in modes):
+        raise ValueError("BENCH schema: missing multi-step fused row "
+                         "(paged-stream-fused-sN)")
     for row in out["rows"]:
         missing = REQUIRED_ROW_KEYS - set(row)
         if missing:
@@ -206,6 +225,11 @@ def main():
                     help="ESL ring width (adds the ring scaling rows)")
     ap.add_argument("--rings", type=int, default=1,
                     help="sub-ring fleet size (per-ring tokens/s rows)")
+    ap.add_argument("--steps-per-sync", type=int, default=4,
+                    help="window size of the multi-step fused row")
+    ap.add_argument("--block-s", type=int, default=0,
+                    help="KV stream tile override (0 = planned default; "
+                         "recorded per row for hardware tuning sweeps)")
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: validate the result schema and "
@@ -213,10 +237,14 @@ def main():
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="result file written in --smoke mode")
     args = ap.parse_args()
+    # the multi-step row's window size (>= 2 so the contrast exists)
+    S = max(args.steps_per_sync, 2)
     if args.smoke:
         args.requests = min(args.requests, 6)
         args.slots = min(args.slots, 2)
-        args.max_new = min(args.max_new, 4)
+        # >= 2 full S-step windows per request, so the ~Sx host-sync
+        # reduction is observable on the smoke trace
+        args.max_new = min(args.max_new, 2 * S)
         args.max_seq = min(args.max_seq, 64)
 
     cfg = get_config(args.arch).reduced()
@@ -237,7 +265,8 @@ def main():
 
     dense, dense_outs = run_engine(model, params, prompts,
                                    slots=args.slots, max_seq=args.max_seq,
-                                   max_new=args.max_new, paged=False)
+                                   max_new=args.max_new, paged=False,
+                                   block_s=args.block_s)
     # paged pool sized at half the dense capacity: enough for the trace's
     # resident tokens, impossible for a dense allocator.  Same pool, two
     # dataflows: the gather oracle (contiguous per-request copy each
@@ -245,14 +274,34 @@ def main():
     table_len = args.max_seq // args.block_size
     num_blocks = args.num_blocks or \
         (args.slots * table_len) // 2 + 1
+    paged_kw = dict(slots=args.slots, max_seq=args.max_seq,
+                    max_new=args.max_new, paged=True,
+                    block_size=args.block_size, num_blocks=num_blocks)
+    # the streamed kernel's tile is structurally the pool block size, so
+    # a --block-s override only reaches the gather/dense flash chunk
+    stream_bs = args.block_s if args.block_s == args.block_size else 0
     engines = [("dense", dense, dense_outs)]
-    for kern in ("gather", "stream"):
+    for kern, bs in (("gather", args.block_s), ("stream", stream_bs)):
         eng, outs = run_engine(model, params, prompts,
-                               slots=args.slots, max_seq=args.max_seq,
-                               max_new=args.max_new, paged=True,
-                               block_size=args.block_size,
-                               num_blocks=num_blocks, paged_kernel=kern)
+                               paged_kernel=kern, block_s=bs, **paged_kw)
         engines.append((f"paged-{kern}", eng, outs))
+    # the synced-vs-fused contrast (paper C1 on-chip sampling): same
+    # streamed pool, three host-loop disciplines — full logits row to
+    # host per token, fused 1-step (token ids only), fused multi-step
+    # (steps_per_sync tokens per readback)
+    eng, outs = run_engine(model, params, prompts, paged_kernel="stream",
+                           sampling="host", block_s=stream_bs, **paged_kw)
+    engines.append(("paged-stream-synced", eng, outs))
+    # multi-step windows reserve their whole lookahead up front and
+    # NEVER preempt for it, so at the half-capacity pool above the
+    # engine would (correctly) degrade to single-step under pressure —
+    # the S-step row gets the dense-equivalent pool to show the
+    # headroom-funded win (pool fields record the difference)
+    msd_kw = dict(paged_kw, num_blocks=args.slots * table_len + 1)
+    eng, outs = run_engine(model, params, prompts, paged_kernel="stream",
+                           sampling="fused", steps_per_sync=S,
+                           block_s=stream_bs, **msd_kw)
+    engines.append((f"paged-stream-fused-s{S}", eng, outs))
 
     bucket_bound = int(math.log2(args.max_seq)) + 1
     rows = []
@@ -276,6 +325,16 @@ def main():
             # measured from the lowered program, not the formula
             "view_tensors_in_program": (view_tensor_count(eng)
                                         if eng.paged else None),
+            "sampling": eng.sampling,
+            "steps_per_sync": eng.steps_per_sync,
+            "host_syncs": st.host_syncs,
+            "prefill_syncs": st.prefill_syncs,
+            "syncs_per_token": round(st.syncs_per_token, 4),
+            "bytes_to_host_per_token": round(st.bytes_to_host_per_token,
+                                             1),
+            "overrun_tokens": st.overrun_tokens,
+            "block_s": eng.decode_block_s(),
+            "planned_block_s": eng.planned_block_s(),
         })
     scaling_rows, ring_stats = [], []
     if args.tp > 1:
@@ -300,7 +359,7 @@ def main():
         for r in rows:
             occ_pool = (f"  pool {r['pool_peak_blocks']}/{r['pool_blocks']}"
                         if r["pool_blocks"] else "")
-            print(f"  {r['mode']:>12}: {r['tokens_per_s']:8.1f} tok/s  "
+            print(f"  {r['mode']:>22}: {r['tokens_per_s']:8.1f} tok/s  "
                   f"{r['ms_per_token']:7.2f} ms/tok  "
                   f"occ {r['occupancy']:.2f}  "
                   f"traces {r['prefill_traces']}  "
@@ -309,6 +368,13 @@ def main():
                   f"(moved/step {r['kv_moved_bytes_per_step']/1024:.0f} "
                   f"KiB, view tensors "
                   f"{r['view_tensors_in_program']}){occ_pool}")
+            print(f"  {'':>22}  syncs {r['host_syncs']} "
+                  f"({r['syncs_per_token']:.2f}/tok)  "
+                  f"B->host/tok {r['bytes_to_host_per_token']:.1f}  "
+                  f"overrun {r['overrun_tokens']}  "
+                  f"[{r['sampling']}, S={r['steps_per_sync']}, "
+                  f"block_s {r['block_s']} "
+                  f"(planned {r['planned_block_s']})]")
         print(f"  bucketed prefill traces <= log2(max_seq)+1 = "
               f"{bucket_bound} (vs {distinct_lengths} distinct lengths); "
               f"outputs identical: {out['same_output']}")
@@ -338,6 +404,32 @@ def main():
     assert by_mode["paged-gather"]["view_tensors_in_program"] > 0, \
         "gather oracle no longer materializes the view (shape drift? " \
         "update view_tensor_count)"
+    # host-sync gates (paper C1): fused sampling must NOT ship the
+    # logits row — device->host payload per token is a small O(slots)
+    # constant (int32 ids + window slack), never O(vocab); the synced
+    # baseline pays at least the full fp32 row per token.  Multi-step
+    # dispatch must amortize the per-token sync ~Sx (compared on decode
+    # syncs; prefill syncs are one per request in every mode).
+    fused1 = by_mode["paged-stream"]
+    synced = by_mode["paged-stream-synced"]
+    fusedN = by_mode[f"paged-stream-fused-s{S}"]
+    small = 16 * args.slots + 32
+    for r in (fused1, fusedN):
+        assert r["bytes_to_host_per_token"] <= small, \
+            (r["mode"], r["bytes_to_host_per_token"],
+             "fused bytes/token must exclude the logits row")
+    assert synced["bytes_to_host_per_token"] >= 4 * cfg.vocab_size, \
+        (synced["bytes_to_host_per_token"],
+         "synced baseline should pay >= one fp32 logits row per token")
+    dec_syncs_1 = fused1["host_syncs"] - fused1["prefill_syncs"]
+    dec_syncs_n = fusedN["host_syncs"] - fusedN["prefill_syncs"]
+    # a request decoding ~2S tokens needs >= 2 windows, so the best
+    # finite-trace ratio is (2S-1)/2 — gate at S/2 to leave headroom
+    # for resume rounds while still scaling with the window size
+    assert dec_syncs_n * S <= dec_syncs_1 * 2, \
+        (dec_syncs_n, dec_syncs_1,
+         f"steps_per_sync={S} should cut decode host syncs ~{S}x "
+         "(>= S/2 required)")
     if args.smoke:
         validate_bench(out)
         Path(args.out).write_text(json.dumps(out, indent=2),

@@ -77,7 +77,29 @@ def resolve_paged_kernel(plan, block_size: int, requested: str,
     return requested
 
 
-def plan_block_s(S: int, dh: int, gs: int, dtype_bytes: int = 2) -> int:
+def plan_block_s(S: int, dh: int, gs: int, dtype_bytes: int = 2,
+                 override: int = 0) -> int:
+    """Pick the KV stream tile: largest 128-aligned divisor of ``S``
+    whose double-buffered K+V footprint fits the VMEM budget.
+
+    ``override`` (the ``--block-s`` knob) short-circuits the search so
+    real-hardware runs can sweep tile sizes against this planner — the
+    ROADMAP's tune-on-TPU item.  It is clamped to ``S`` and must divide
+    it (the kernels' grids assume exact tiling).
+    """
+    if override:
+        bs = min(override, S)
+        if S % bs:
+            raise ValueError(
+                f"block_s override {override} does not tile S={S}")
+        if bs % LANE and bs != S:
+            # the compiled kernel's KV tiles must be LANE-aligned (a
+            # full-span tile is exempt: the kernel clamps to S) — reject
+            # here so a TPU sweep fails at plan time, not Mosaic lowering
+            raise ValueError(
+                f"block_s override {override} is not LANE({LANE})-"
+                f"aligned (or the full span {S})")
+        return bs
     bs = min(S, 4096)
     while bs > LANE:
         tile = 2 * bs * dh * dtype_bytes * 2     # K+V, double-buffered
@@ -87,11 +109,16 @@ def plan_block_s(S: int, dh: int, gs: int, dtype_bytes: int = 2) -> int:
     return max(LANE, bs)
 
 
-@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_s"))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      lengths: jax.Array, *, use_pallas: bool = True,
-                     interpret: bool = True) -> jax.Array:
-    """q: (B,H,dh); k,v: (B,S,G,dh); lengths: (B,) -> (B,H,dh)."""
+                     interpret: bool = True,
+                     block_s: int = 0) -> jax.Array:
+    """q: (B,H,dh); k,v: (B,S,G,dh); lengths: (B,) -> (B,H,dh).
+
+    ``block_s`` overrides the planned KV stream tile (0 = let
+    :func:`plan_block_s` choose).
+    """
     B, H, dh = q.shape
     S, G = k.shape[1], k.shape[2]
     if (not use_pallas) or H % G or S % LANE or dh % LANE:
@@ -100,7 +127,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         ke = jnp.repeat(k, gs, axis=2)[:, :, :H]
         ve = jnp.repeat(v, gs, axis=2)[:, :, :H]
         return decode_attention_ref(q, ke, ve, lengths)
-    bs = plan_block_s(S, dh, H // G, k.dtype.itemsize)
+    bs = plan_block_s(S, dh, H // G, k.dtype.itemsize, override=block_s)
     return decode_attention_pallas(q, k, v, lengths, block_s=bs,
                                    interpret=interpret)
 

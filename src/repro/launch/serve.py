@@ -19,6 +19,13 @@ Paged-KV knobs: ``--block-size`` (tokens per KV block), ``--num-blocks``
 (force the contiguous per-slot cache), ``--paged-kernel
 {auto,stream,gather}`` (stream KV tiles through the Pallas paged kernel
 vs. materialize the contiguous gather view — see docs/serving.md).
+
+Sampling / dispatch knobs: ``--sampling {fused,host}`` (fused = sample
+inside the jitted decode program, only token ids reach the host — the
+paper's on-chip "sampling with sort"; host = the synced baseline that
+ships the full logits row per token), ``--steps-per-sync N`` (run N
+decode steps per host readback via one lax.scan window), ``--block-s``
+(override the planned KV stream tile / flash chunk for hardware tuning).
 """
 from __future__ import annotations
 
@@ -75,6 +82,16 @@ def main():
                     help="paged decode dataflow: stream KV tiles through "
                          "the Pallas kernel (no per-request copy), gather "
                          "the contiguous view (reference oracle), or auto")
+    ap.add_argument("--sampling", default="fused",
+                    choices=("fused", "host"),
+                    help="fused: sample in-jit, only token ids reach the "
+                         "host; host: per-token logits readback baseline")
+    ap.add_argument("--steps-per-sync", type=int, default=1,
+                    help="decode steps per host sync (fused sampling "
+                         "only): N steps run as one lax.scan window")
+    ap.add_argument("--block-s", type=int, default=0,
+                    help="KV stream tile / flash chunk override threaded "
+                         "to plan_block_s (0 = planned default)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -99,7 +116,10 @@ def main():
                      num_blocks=args.num_blocks,
                      kv_budget_bytes=args.kv_budget_mb << 20,
                      min_bucket=args.min_bucket,
-                     paged_kernel=args.paged_kernel)
+                     paged_kernel=args.paged_kernel,
+                     sampling=args.sampling,
+                     steps_per_sync=args.steps_per_sync,
+                     block_s=args.block_s)
     if rings > 1:
         engine = MultiRingEngine(model, params, mesh, ring_size=tp,
                                  **engine_kw)
@@ -138,6 +158,14 @@ def main():
               f"dense-equiv {first.dense_equiv_bytes()}), "
               f"prefill traces={st.prefill_traces}, "
               f"preemptions={st.preemptions}")
+        print(f"[serve] sampling={first.sampling} "
+              f"steps_per_sync={first.steps_per_sync}: "
+              f"{st.host_syncs} host syncs "
+              f"({st.syncs_per_token:.2f}/token), "
+              f"{st.bytes_to_host_per_token:.1f} B->host/token, "
+              f"overrun={st.overrun_tokens}, "
+              f"block_s={first.decode_block_s()} "
+              f"(planned {first.planned_block_s()})")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o[:12]}")
 

@@ -271,9 +271,15 @@ def prefill_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
 def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                      cache: Dict[str, jax.Array], positions: jax.Array,
                      block_table: Optional[jax.Array] = None,
-                     paged_kernel: str = "auto"
+                     paged_kernel: str = "auto",
+                     block_s: int = 0
                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token generation step against the KV cache.
+
+    ``block_s`` overrides the KV stream chunk of the dense / gathered
+    flash-decode path (0 = the default 2048); the streamed paged kernel's
+    tile is structurally the pool block size, so the override does not
+    apply there (the engine rejects conflicting requests up front).
 
     x: (B,1,D[/tp]);  positions: (B,) current position of each sequence.
     cache['k'/'v']: local (B, Smax[/kvseq], kpr, dh); cache['len'] == positions
@@ -335,7 +341,8 @@ def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
         # CARRY in place — no full-cache rewrite per layer (§Perf it. 1b)
         kmap = local_kmap(plan, env)
         out = _flash_decode_chunked(q, kc, vc, kmap,
-                                    kv_valid_len=positions, chunk=2048,
+                                    kv_valid_len=positions,
+                                    chunk=block_s or 2048,
                                     k_new=k_new, v_new=v_new)
         updates = {"k_new": k_new.astype(kc.dtype),
                    "v_new": v_new.astype(vc.dtype),

@@ -54,8 +54,12 @@ class Model:
     def forward(self, params: Params, tokens: jax.Array, *, env: AxisEnv,
                 mode: str, positions=None, cache=None, frames=None,
                 patch_embeds=None, block_tables=None, paged_kernel="auto",
-                gather_fn=None):
+                block_s=0, gather_fn=None):
         if self.cfg.family == "encdec":
+            if block_s:
+                raise ValueError(
+                    "block_s override is not supported for encdec "
+                    "decode (no paged/flash-chunk seam to tune)")
             return wh.forward_encdec(
                 params, tokens, cfg=self.cfg, plan=self.plan, env=env,
                 mode=mode, frames=frames, positions=positions, cache=cache,
@@ -64,7 +68,7 @@ class Model:
             params, tokens, cfg=self.cfg, plan=self.plan, env=env, mode=mode,
             positions=positions, cache=cache, patch_embeds=patch_embeds,
             block_tables=block_tables, paged_kernel=paged_kernel,
-            gather_fn=gather_fn)
+            block_s=block_s, gather_fn=gather_fn)
 
     # ---- decode cache -----------------------------------------------------
 

@@ -227,7 +227,7 @@ def apply_layer(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                 layer_idx: int, positions: jax.Array, mode: str,
                 cache: Optional[Params] = None,
                 block_tables: Optional[jax.Array] = None,
-                paged_kernel: str = "auto"
+                paged_kernel: str = "auto", block_s: int = 0
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.float32(0.0)
@@ -257,7 +257,8 @@ def apply_layer(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
             h, kv = attn_mod.decode_attention(
                 p["attn"], h_in, cfg=cfg, plan=plan, env=env,
                 cache=cache, positions=positions,
-                block_table=block_tables, paged_kernel=paged_kernel)
+                block_table=block_tables, paged_kernel=paged_kernel,
+                block_s=block_s)
             new_cache = kv
         elif mode == "prefill":
             h, kv = attn_mod.prefill_attention(
@@ -289,7 +290,7 @@ def apply_super_block(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                       positions: jax.Array, mode: str,
                       cache: Optional[Params] = None,
                       block_tables: Optional[jax.Array] = None,
-                      paged_kernel: str = "auto"):
+                      paged_kernel: str = "auto", block_s: int = 0):
     sb = super_block_size(cfg)
     aux_total = jnp.float32(0.0)
     new_cache: Dict[str, Any] = {}
@@ -299,7 +300,8 @@ def apply_super_block(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                                   layer_idx=j, positions=positions,
                                   mode=mode, cache=cj,
                                   block_tables=block_tables,
-                                  paged_kernel=paged_kernel)
+                                  paged_kernel=paged_kernel,
+                                  block_s=block_s)
         if cache is not None:
             new_cache[f"l{j}"] = cj2
         aux_total = aux_total + aux
@@ -365,6 +367,7 @@ def forward(params: Params, tokens: jax.Array, *, cfg, plan, env: AxisEnv,
             patch_embeds: Optional[jax.Array] = None,
             block_tables: Optional[jax.Array] = None,
             paged_kernel: str = "auto",
+            block_s: int = 0,
             gather_fn=None):
     """Shared forward.  ``gather_fn(subtree_path, subtree)`` applies FSDP
     gathering (injected by the step builder; identity in smoke mode).
@@ -435,7 +438,7 @@ def forward(params: Params, tokens: jax.Array, *, cfg, plan, env: AxisEnv,
             xc, upd, aux = apply_super_block(
                 bp, xc, cfg=cfg, plan=plan, env=env, positions=positions,
                 mode=mode, cache=sl, block_tables=block_tables,
-                paged_kernel=paged_kernel)
+                paged_kernel=paged_kernel, block_s=block_s)
             cache_st = _scatter_cache_updates(cache_st, upd, idx,
                                               seq_sharded, block_tables)
             return (xc, auxc + aux, cache_st), None

@@ -32,6 +32,18 @@ and the paged pool compose:
   the pool (or the slot's dense region).
 * **Preemption** — when the pool is exhausted, the newest sequence is
   evicted and re-prefiled later (recompute), protecting old requests.
+* **Fused sampling (C1)** — by default the sampler runs INSIDE the
+  jitted decode program (the paper's VXE "sampling with sort"):
+  per-slot SamplingParams ride as device arrays, the rng chain is
+  device state, and only int32 token ids cross to the host — O(slots)
+  bytes per token instead of the O(slots x vocab) logits row
+  (``EngineStats.host_syncs`` / ``bytes_to_host`` measure it).
+  ``steps_per_sync=S`` further runs S decode steps as one ``lax.scan``
+  window with on-device stop masking (host reconciles overrun tokens
+  after readback), and ``pipeline=True`` double-buffers window k+1's
+  dispatch before blocking on window k.  ``sampling="host"`` keeps the
+  pre-fusion loop as the parity oracle; token streams are identical in
+  both modes (greedy bit-for-bit; stochastic for a fixed rng).
 
 **Ring parallelism (C2)** — ``LPUEngine(model, params, mesh=...)`` with
 a plan built for the mesh shards weights AND the KV pool over the
@@ -58,7 +70,9 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Set, Union
+from functools import partial
+from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -70,13 +84,15 @@ from jax.sharding import PartitionSpec as P
 from repro.core.compat import shard_map
 from repro.core.dist import make_axis_env
 from repro.core.rings import reconfigure, submeshes
-from repro.kernels.decode_attention.ops import resolve_paged_kernel
+from repro.kernels.decode_attention.ops import (plan_block_s,
+                                                resolve_paged_kernel)
 from repro.serving.kv_cache import (LANE, BlockPool, cache_bytes,
                                     per_rank_block_bytes,
                                     pool_blocks_for_budget,
                                     scatter_prefill_dense,
                                     scatter_prefill_pages)
-from repro.serving.sampler import SamplingParams, sample_local
+from repro.serving.sampler import (SamplingParams, sample_batched,
+                                   sample_local, sample_sharded_batched)
 from repro.serving.scheduler import RingRouter, Scheduler, SeqSlot
 
 StreamCB = Callable[[int, int], None]   # (request_id, token)
@@ -115,6 +131,10 @@ class EngineStats:
     prefill_traces: int = 0       # distinct prefill buckets traced
     prefills: int = 0             # total prefill launches (incl. resume)
     peak_pool_blocks: int = 0     # high-water block-pool occupancy
+    host_syncs: int = 0           # blocking device->host readbacks
+    prefill_syncs: int = 0        # ...of which sample a prefill row
+    bytes_to_host: int = 0        # payload bytes of those readbacks
+    overrun_tokens: int = 0       # sampled in a window, discarded by host
 
     @property
     def tokens_per_s(self) -> float:
@@ -123,6 +143,16 @@ class EngineStats:
     @property
     def occupancy(self) -> float:
         return self.busy_slot_steps / max(self.slot_steps, 1)
+
+    @property
+    def bytes_to_host_per_token(self) -> float:
+        """Device->host payload per decode token: O(slots * vocab) for
+        the host-sampled path, O(slots) once sampling is fused in-jit."""
+        return self.bytes_to_host / max(self.tokens, 1)
+
+    @property
+    def syncs_per_token(self) -> float:
+        return self.host_syncs / max(self.tokens, 1)
 
 
 class LPUEngine:
@@ -142,7 +172,9 @@ class LPUEngine:
                  paged: Optional[bool] = None, block_size: int = 0,
                  num_blocks: int = 0, min_bucket: int = 16,
                  mesh=None, kv_budget_bytes: int = 0,
-                 paged_kernel: str = "auto"):
+                 paged_kernel: str = "auto", sampling: str = "fused",
+                 steps_per_sync: int = 1, pipeline: bool = True,
+                 block_s: int = 0):
         self.model = model
         self.cfg = model.cfg
         self.plan = model.plan
@@ -169,6 +201,24 @@ class LPUEngine:
         if paged_kernel not in ("auto", "stream", "gather"):
             raise ValueError(f"paged_kernel={paged_kernel!r} not in "
                              "('auto', 'stream', 'gather')")
+        # sampling="fused" (default) runs the sampler INSIDE the jitted
+        # decode program — the paper's VXE "sampling with sort" (C1):
+        # only the sampled token ids ever cross to the host.  "host" is
+        # the pre-fusion baseline (full logits row to host, per-slot
+        # python sampling), kept as the parity oracle and the synced
+        # side of serving_bench's synced-vs-fused rows.
+        if sampling not in ("fused", "host"):
+            raise ValueError(f"sampling={sampling!r} not in "
+                             "('fused', 'host')")
+        if steps_per_sync < 1:
+            raise ValueError(f"steps_per_sync={steps_per_sync} must be >= 1")
+        if steps_per_sync > 1 and sampling != "fused":
+            raise ValueError("steps_per_sync > 1 needs fused sampling: "
+                             "the host path must read logits every step")
+        self.sampling = sampling
+        self.steps_per_sync = int(steps_per_sync)
+        self.pipeline = bool(pipeline)
+        self.block_s = int(block_s)
         # pow2 prefill buckets pad the prompt with token 0; attention
         # masks padded KV by valid length, but recurrent state (mamba /
         # rwkv) folds every position in — those families prefill at the
@@ -215,11 +265,20 @@ class LPUEngine:
         self.paged_kernel = (resolve_paged_kernel(
             self.plan, self.block_size, paged_kernel) if self.paged
             else None)
+        if self.block_s and self.paged_kernel == "stream" and \
+                self.block_s != self.block_size:
+            raise ValueError(
+                "the streamed paged kernel's KV tile IS the pool "
+                f"block_size ({self.block_size}); block_s="
+                f"{self.block_s} conflicts (use block_size, or the "
+                "gather/dense paths where block_s sets the flash chunk)")
         self.sched = Scheduler(slots, max_seq, pool, min_bucket)
         self.stats = EngineStats()
         self._results: Dict[int, List[int]] = {}
         self._rid = 0
         self._buckets_traced: Set[int] = set()
+        self._window_jits: Dict[int, Callable] = {}
+        self._sample_one = jax.jit(self._sample_one_fn)
         if mesh is None:
             self._decode = jax.jit(self._decode_fn)
             self._prefill = jax.jit(self._prefill_fn)
@@ -234,8 +293,66 @@ class LPUEngine:
         logits, new_cache, _ = self.model.forward(
             params, tokens, env=self.env, mode="decode",
             positions=positions, cache=cache, block_tables=tables,
-            paged_kernel=self.paged_kernel or "gather")
+            paged_kernel=self.paged_kernel or "gather",
+            block_s=self.block_s)
         return logits[:, -1], new_cache
+
+    def _window_fn(self, S, params, cache, tables, last, pos, n_out,
+                   alive, rng, temps, top_ks, top_ps, max_new):
+        """``S`` fused decode steps in ONE jitted program (lax.scan).
+
+        Each scan step runs the forward, samples every slot in-jit
+        (:func:`sample_batched`; the vocab-sharded
+        :func:`sample_sharded_batched` under ring tp, so the full
+        logits row never leaves the ranks), and applies the engine's
+        finish rules ON DEVICE: a slot that hits eos / its token budget
+        / max_seq drops out of ``alive`` and is FROZEN — its
+        (last, pos) stop advancing, so subsequent steps rewrite the
+        same KV entry with the same value (idempotent don't-care work,
+        like the null-block writes of idle slots).  The host reads back
+        only the (S, slots) int32 token matrix and discards the frozen
+        slots' overrun tokens during reconciliation.
+        """
+        eos = jnp.int32(-1 if self.eos_id is None else self.eos_id)
+        axis, tp = self.env.model, self.tp
+
+        def one(carry, _):
+            cache, last, pos, n_out, alive, rng = carry
+            logits, cache, _ = self.model.forward(
+                params, last[:, None], env=self.env, mode="decode",
+                positions=pos, cache=cache, block_tables=tables,
+                paged_kernel=self.paged_kernel or "gather",
+                block_s=self.block_s)
+            toks, rng = sample_sharded_batched(
+                logits[:, -1], rng, temps, top_ks, top_ps, alive, axis,
+                tp)
+            live = alive.astype(jnp.int32)
+            n_out = n_out + live
+            pos = pos + live
+            fin = (n_out >= max_new) | (toks == eos) | \
+                (pos >= self.max_seq - 1)
+            last = jnp.where(alive, toks, last)
+            alive = alive & ~fin
+            return (cache, last, pos, n_out, alive, rng), toks
+
+        (cache, last, pos, n_out, alive, rng), tok_mat = lax.scan(
+            one, (cache, last, pos, n_out, alive, rng), None, length=S)
+        return tok_mat, cache, last, pos, n_out, alive, rng
+
+    def _window(self, S: int) -> Callable:
+        """The jitted ``S``-step fused window (one trace per S)."""
+        fn = self._window_jits.get(S)
+        if fn is None:
+            fn = (jax.jit(partial(self._window_fn, S)) if self.mesh is None
+                  else self._build_mesh_window(S))
+            self._window_jits[S] = fn
+        return fn
+
+    def _sample_one_fn(self, row, rng, temp, top_k, top_p):
+        """Fused sampling of ONE prefill logits row; rng stays on device."""
+        toks, rng = sample_batched(row[None], rng, temp[None],
+                                   top_k[None], top_p[None])
+        return toks[0], rng
 
     def _prefill_fn(self, params, tokens, true_len):
         """Batch-1 prefill of a bucket-padded prompt.
@@ -273,6 +390,7 @@ class LPUEngine:
         specs, _ = self.model.param_specs()
         self.params = jax.device_put(self.params, self._named(specs))
         cspecs = self.model.cache_specs(self.env, paged=self.paged)
+        self._mesh_specs = (specs, cspecs)
         cspecs_named = self._named(cspecs)
         self.cache = jax.device_put(self.cache, cspecs_named)
         pf_cspecs = self.model.cache_specs(self.env1)
@@ -331,14 +449,87 @@ class LPUEngine:
         self._write_dense = jax.jit(scatter_prefill_dense,
                                     out_shardings=cspecs_named)
 
+    def _build_mesh_window(self, S: int) -> Callable:
+        """shard_map-wrapped fused window over the model ring.
+
+        Token ids come out REPLICATED: every rank runs the identical
+        rng chain and samples from the same all-gathered (tp x k)
+        candidate set (:func:`sample_sharded_batched`), so no broadcast
+        is needed and the full vocab row never leaves the ranks — the
+        multi-LPU form of the paper's on-chip sampling.
+        """
+        mesh = self.mesh
+        specs, cspecs = self._mesh_specs
+        rep = P(None)
+        out_specs = (P(None, None), cspecs) + (rep,) * 5
+
+        if self.paged:
+            def win(params, cache, tables, last, pos, n_out, alive, rng,
+                    temps, top_ks, top_ps, max_new):
+                return self._window_fn(S, params, cache, tables, last,
+                                       pos, n_out, alive, rng, temps,
+                                       top_ks, top_ps, max_new)
+            return jax.jit(shard_map(
+                win, mesh=mesh,
+                in_specs=(specs, cspecs, P(None, None)) + (rep,) * 9,
+                out_specs=out_specs, check_vma=False))
+
+        def win_d(params, cache, last, pos, n_out, alive, rng,
+                  temps, top_ks, top_ps, max_new):
+            return self._window_fn(S, params, cache, None, last, pos,
+                                   n_out, alive, rng, temps, top_ks,
+                                   top_ps, max_new)
+        sm = jax.jit(shard_map(
+            win_d, mesh=mesh,
+            in_specs=(specs, cspecs) + (rep,) * 9,
+            out_specs=out_specs, check_vma=False))
+
+        def drop_tables(params, cache, tables, *rest):
+            return sm(params, cache, *rest)
+        # keep .lower working (lower_decode_text / the bench's gate)
+        drop_tables.lower = \
+            lambda params, cache, tables, *rest: sm.lower(params, cache,
+                                                          *rest)
+        return drop_tables
+
     # -- sampling ------------------------------------------------------
 
     def _sample(self, logits_np: np.ndarray, logits_dev,
                 params: SamplingParams) -> int:
+        """Host-path sampling (``sampling="host"``): per-slot python loop
+        over a full logits row already copied to host — the pre-fusion
+        baseline whose rng-split order the fused sampler reproduces."""
         if params.temperature <= 0.0:
             return int(np.argmax(logits_np))
         self.rng, sub = jax.random.split(self.rng)
+        self.stats.host_syncs += 1
+        self.stats.bytes_to_host += 4
         return int(sample_local(logits_dev[None], sub, params)[0])
+
+    def _sample_first(self, row, params: SamplingParams) -> int:
+        """Sample the prefill row per the engine's sampling mode.
+
+        Fused: the row stays on device, only the token id (4 bytes)
+        crosses; the rng chain advances on device exactly as the host
+        loop would (greedy consumes nothing).
+        """
+        if self.sampling == "fused":
+            tok, self.rng = self._sample_one(
+                row, self.rng, np.float32(params.temperature),
+                np.int32(params.top_k), np.float32(params.top_p))
+            self.stats.host_syncs += 1
+            self.stats.prefill_syncs += 1
+            self.stats.bytes_to_host += 4
+            return int(tok)
+        row_np = np.asarray(row)
+        self.stats.host_syncs += 1
+        self.stats.bytes_to_host += row_np.nbytes
+        before = self.stats.host_syncs
+        tok = self._sample(row_np, row, params)
+        # the row readback + any nested stochastic draw are both
+        # prefill-attributed syncs (decode syncs = host_syncs - these)
+        self.stats.prefill_syncs += 1 + self.stats.host_syncs - before
+        return tok
 
     # -- prefill + admission -------------------------------------------
 
@@ -387,8 +578,7 @@ class LPUEngine:
         if seq.resumed:
             seq.last_token = req.out[-1]
             return None
-        row_np = np.asarray(row)
-        tok = self._sample(row_np, row, req.params)
+        tok = self._sample_first(row, req.params)
         req.out.append(tok)
         seq.last_token = tok
         if req.stream_cb:
@@ -421,8 +611,11 @@ class LPUEngine:
         return req.rid
 
     def step(self) -> List[Request]:
-        """One scheduler round: admit + prefill, then one decode step for
-        the whole slot batch.  Returns requests finished this round."""
+        """One scheduler round: admit + prefill, then one decode round
+        for the whole slot batch — a fused window of up to
+        ``steps_per_sync`` device steps (pipelined one window ahead) in
+        the default fused mode, or a single host-sampled step with
+        ``sampling="host"``.  Returns requests finished this round."""
         t0 = time.time()
         try:
             return self._step()
@@ -445,8 +638,21 @@ class LPUEngine:
                                               self.sched.pool.num_used)
         if self.sched.num_active() == 0:
             return finished
-        self._refresh_tables()
+        if self.sampling == "fused":
+            finished += self._fused_decode_round()
+        else:
+            finished += self._host_decode_step()
+        self.stats.prefill_traces = len(self._buckets_traced)
+        return finished
 
+    # -- host-sampled decode (the pre-fusion baseline) -----------------
+
+    def _host_decode_step(self) -> List[Request]:
+        """One decode step, sampling on host: the full (slots, vocab)
+        logits tensor crosses to the host every token — the
+        serialization the fused path removes (kept as the parity oracle
+        and the "synced" row of serving_bench)."""
+        self._refresh_tables()
         toks = np.zeros((self.slots, 1), np.int32)
         pos = np.zeros((self.slots,), np.int32)
         for slot, seq in enumerate(self.sched.active):
@@ -458,7 +664,10 @@ class LPUEngine:
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
             tables)
         logits_np = np.asarray(logits)
+        self.stats.host_syncs += 1
+        self.stats.bytes_to_host += logits_np.nbytes
 
+        finished: List[Request] = []
         self.stats.steps += 1
         self.stats.slot_steps += self.slots
         for slot, seq in enumerate(self.sched.active):
@@ -475,7 +684,131 @@ class LPUEngine:
                 req.stream_cb(req.rid, tok)
             if self._should_finish(seq, tok):
                 finished.append(self._finish(seq))
-        self.stats.prefill_traces = len(self._buckets_traced)
+        return finished
+
+    # -- fused decode: multi-step windows + double-buffered dispatch ---
+
+    def _slot_state(self) -> Tuple[tuple, tuple]:
+        """Host slot state -> the window program's carry + per-slot
+        sampling params (tiny O(slots) uploads)."""
+        B = self.slots
+        last = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        n_out = np.zeros((B,), np.int32)
+        alive = np.zeros((B,), bool)
+        temps = np.zeros((B,), np.float32)
+        top_ks = np.zeros((B,), np.int32)
+        top_ps = np.ones((B,), np.float32)
+        max_new = np.zeros((B,), np.int32)
+        for slot, seq in enumerate(self.sched.active):
+            if seq is None:
+                continue
+            sp = seq.req.params
+            last[slot] = seq.last_token
+            pos[slot] = seq.pos
+            n_out[slot] = len(seq.req.out)
+            alive[slot] = True
+            temps[slot] = sp.temperature
+            top_ks[slot] = sp.top_k
+            top_ps[slot] = sp.top_p
+            max_new[slot] = seq.req.max_new_tokens
+        return (last, pos, n_out, alive), (temps, top_ks, top_ps, max_new)
+
+    def _admission_waiting(self) -> bool:
+        """True when the baseline loop could admit next step: a queued
+        request AND a free slot (pool pressure pending).  Multi-step
+        windows stand down then, so admission latency stays at the
+        single-step baseline's."""
+        return bool(self.sched.queue) and \
+            any(s is None for s in self.sched.active)
+
+    def _may_survive(self, steps: int) -> bool:
+        """Could any slot still be alive after ``steps`` more tokens?
+        (Budget/length check only — eos can still end a window early;
+        speculation past an eos is bounded waste, never wrong.)"""
+        for seq in self.sched.active:
+            if seq is None:
+                continue
+            if (seq.req.max_new_tokens - len(seq.req.out)) > steps and \
+                    (self.max_seq - 1 - seq.pos) > steps:
+                return True
+        return False
+
+    def _dispatch_window(self, win: int, carry: tuple, samp: tuple):
+        """Launch one fused window (non-blocking: jax dispatch is async).
+        Returns ((win, token matrix, active snapshot), device carry)."""
+        tables = (jnp.asarray(self.block_tables) if self.paged else None)
+        out = self._window(win)(self.params, self.cache, tables, *carry,
+                                self.rng, *samp)
+        tok_mat, self.cache, last, pos, n_out, alive, self.rng = out
+        snapshot = [s is not None for s in self.sched.active]
+        return (win, tok_mat, snapshot), (last, pos, n_out, alive)
+
+    def _reconcile(self, handle) -> List[Request]:
+        """Block on a window's token matrix (the ONE device->host sync
+        per window) and replay the finish rules the device already
+        applied: tokens of slots that finished earlier in the window —
+        or in a previously reconciled window — are overrun and
+        discarded; everything else appends exactly as the single-step
+        loop would."""
+        win, tok_mat, dispatch_active = handle
+        toks = np.asarray(tok_mat)                     # (win, slots)
+        self.stats.host_syncs += 1
+        self.stats.bytes_to_host += toks.nbytes
+        finished: List[Request] = []
+        for s in range(win):
+            if self.sched.num_active() == 0:
+                self.stats.overrun_tokens += \
+                    (win - s) * sum(dispatch_active)
+                break
+            self.stats.steps += 1
+            self.stats.slot_steps += self.slots
+            for slot, seq in enumerate(self.sched.active):
+                if seq is None:
+                    if dispatch_active[slot]:
+                        self.stats.overrun_tokens += 1
+                    continue
+                req = seq.req
+                self.stats.busy_slot_steps += 1
+                self.stats.tokens += 1
+                tok = int(toks[s, slot])
+                req.out.append(tok)
+                seq.pos += 1
+                seq.last_token = tok
+                if req.stream_cb:
+                    req.stream_cb(req.rid, tok)
+                if self._should_finish(seq, tok):
+                    finished.append(self._finish(seq))
+        return finished
+
+    def _fused_decode_round(self) -> List[Request]:
+        """One fused decode round: up to two pipelined windows.
+
+        Window size is ``steps_per_sync`` whenever no admission is
+        waiting and the scheduler can reserve the whole window's blocks
+        WITHOUT preemption (all-or-nothing, so speculative lookahead
+        never evicts resident work); otherwise a single fused step.
+        With ``pipeline=True`` and an empty queue, window k+1 is
+        dispatched off window k's on-device carry BEFORE blocking on
+        window k's tokens — the device-side finish masking makes the
+        chained carry exact, so the speculation can waste compute
+        (overrun tokens) but never produce wrong ones.
+        """
+        S = self.steps_per_sync
+        win = S if (S > 1 and not self._admission_waiting()
+                    and self.sched.reserve_lookahead(S)) else 1
+        self._refresh_tables()
+        carry, samp = self._slot_state()
+        h1, dev_carry = self._dispatch_window(win, carry, samp)
+        h2 = None
+        if self.pipeline and not self.sched.queue \
+                and self._may_survive(win) \
+                and self.sched.reserve_lookahead(2 * win):
+            self._refresh_tables()
+            h2, _ = self._dispatch_window(win, dev_carry, samp)
+        finished = self._reconcile(h1)
+        if h2 is not None:
+            finished += self._reconcile(h2)
         return finished
 
     def drain(self) -> Dict[int, List[int]]:
@@ -540,6 +873,40 @@ class LPUEngine:
         per_tok = self.kv_cache_bytes() // (self.num_blocks
                                             * self.block_size)
         return per_tok * self.slots * self.max_seq
+
+    def decode_block_s(self) -> int:
+        """KV stream tile of the decode program actually dispatched: the
+        pool block size when streaming off the pool, else the flash
+        chunk (the ``block_s`` override or its 2048 default, clamped to
+        the resident span)."""
+        if self.paged and self.paged_kernel == "stream":
+            return self.block_size
+        return min(self.block_s or 2048, self.max_seq)
+
+    def planned_block_s(self) -> int:
+        """What :func:`plan_block_s` recommends for this span — the
+        reference a real-hardware ``--block-s`` sweep tunes against
+        (ROADMAP: tune the streamed kernel's block size on TPU)."""
+        a = self.plan.attn
+        gs = max(a.hp // max(a.gp, 1), 1) if a is not None else 1
+        dh = a.d_head if a is not None else LANE
+        return plan_block_s(self.max_seq, dh, gs,
+                            jnp.dtype(self.plan.cache_dtype).itemsize)
+
+    def lower_decode_text(self) -> str:
+        """MLIR of the decode program this engine will actually run (the
+        fused 1-step window, or the host-sampled logits step) — the
+        bench's MEASURED no-copy gate greps this text for per-request
+        view tensors instead of trusting the analytic byte formula."""
+        tables = (jnp.asarray(self.block_tables) if self.paged else None)
+        if self.sampling != "fused":
+            toks = jnp.zeros((self.slots, 1), jnp.int32)
+            pos = jnp.zeros((self.slots,), jnp.int32)
+            return self._decode.lower(self.params, self.cache, toks, pos,
+                                      tables).as_text()
+        carry, samp = self._slot_state()
+        return self._window(1).lower(self.params, self.cache, tables,
+                                     *carry, self.rng, *samp).as_text()
 
 
 class MultiRingEngine:

@@ -2,25 +2,36 @@
 
 The paper puts sampling ON the LPU (a vector-execution-engine sort over
 the logits) because shipping a full vocabulary row to the host per token
-would serialize the generation loop on PCIe.  The analog here has two
+would serialize the generation loop on PCIe.  The analog here has three
 layers:
 
 * :func:`sample_local` — temperature / top-k / top-p over a full
   logits row, host- or device-side.  top-p keeps the smallest prefix of
   the sorted distribution with cumulative mass >= p (nucleus), top-k
-  thresholds at the k-th sorted logit; temperature <= 0 short-circuits
-  to greedy argmax so the deterministic path never consumes RNG — that
-  invariant is what makes the engine's greedy token streams
-  bit-reproducible across runs and across tp configurations
-  (tests/test_serving.py ring parity).
+  thresholds at the k-th sorted logit (clamped to the row width, so
+  ``top_k > vocab`` degrades to no filter instead of indexing out of
+  bounds); temperature <= 0 short-circuits to greedy argmax so the
+  deterministic path never consumes RNG — that invariant is what makes
+  the engine's greedy token streams bit-reproducible across runs and
+  across tp configurations (tests/test_serving.py ring parity).
 
-* :func:`sample_sharded` — the ring form for vocab-sharded logits
-  (``lm_logits`` never materializes the full row): each rank pre-selects
-  its local top-k (k <= 64), only the tiny (tp x k) candidate set is
-  all-gathered, and the final softmax/sort runs on that.  Every rank
-  draws with the SAME rng, so the chosen token is replicated ring-wide
-  without a broadcast — the same no-divergence trick the serving engine
-  relies on when it samples once on the host from gathered logits.
+* :func:`sample_batched` — the FUSED form the serving engine jits into
+  its decode program: per-slot ``temperature/top_k/top_p`` arrive as
+  device arrays, every slot's row is sampled in one call, and the RNG
+  rides along as device state (:func:`split_rng_chain`).  Bit-compatible
+  with the host loop that visits slots in order and calls
+  :func:`sample_local` per stochastic slot — the engine's synced-mode
+  oracle (tests/test_fused_decode.py).
+
+* :func:`sample_sharded` / :func:`sample_sharded_batched` — the ring
+  form for vocab-sharded logits (``lm_logits`` never materializes the
+  full row): each rank pre-selects its local top-k (k <= 64), only the
+  tiny (tp x k) candidate set is all-gathered, and the final
+  softmax/sort runs on that.  Every rank draws with the SAME rng, so the
+  chosen token is replicated ring-wide without a broadcast.  The batched
+  form runs inside the engine's ``shard_map`` decode program, so the
+  full vocabulary row never leaves the ranks — the paper's C1 rationale
+  realized end to end.
 
 Mirrors the on-chip sort rationale of the paper's C1 datapath; the
 serving engine (:mod:`repro.serving.engine`) consumes
@@ -28,8 +39,7 @@ serving engine (:mod:`repro.serving.engine`) consumes
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +63,10 @@ def sample_local(logits: jax.Array, rng: jax.Array,
         return jnp.argmax(lg, -1).astype(jnp.int32)
     lg = lg / jnp.maximum(params.temperature, 1e-6)
     if params.top_k and params.top_k > 0:
-        kth = jnp.sort(lg, -1)[:, -params.top_k][:, None]
+        # clamp to the row width: top_k >= V keeps every entry (and the
+        # unclamped -top_k would index out of bounds)
+        k = min(int(params.top_k), lg.shape[-1])
+        kth = jnp.sort(lg, -1)[:, -k][:, None]
         lg = jnp.where(lg >= kth, lg, -jnp.inf)
     if params.top_p < 1.0:
         sorted_lg = jnp.sort(lg, -1)[:, ::-1]
@@ -67,24 +80,128 @@ def sample_local(logits: jax.Array, rng: jax.Array,
     return jax.random.categorical(rng, lg, -1).astype(jnp.int32)
 
 
-def sample_sharded(logits_loc: jax.Array, rng: jax.Array,
-                   params: SamplingParams, axis_name: Optional[str],
-                   tp: int) -> jax.Array:
-    """logits_loc: (B, V/tp) vocab-sharded -> (B,) global token ids.
+# ---------------------------------------------------------------------------
+# fused (in-jit) batched sampling — per-slot params as device arrays
+# ---------------------------------------------------------------------------
 
-    Every rank computes the same result (same rng), so the output is
-    replicated across the ring — no divergence.
+def split_rng_chain(rng: jax.Array, stoch: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Replicate the host loop's sequential RNG splits, in-jit.
+
+    The host engine visits slots in order and calls
+    ``rng, sub = jax.random.split(rng)`` ONLY for active stochastic
+    slots — greedy and idle slots consume nothing, which is what keeps
+    greedy streams bit-identical across batch compositions.  This scan
+    reproduces that exact chain on device: ``stoch`` (B,) marks the
+    consuming slots; the returned per-slot keys equal the host loop's
+    ``sub`` values bit-for-bit (non-consuming slots get a don't-care
+    key).  ``rng`` is a raw uint32 PRNGKey (the engine's convention).
+    """
+    def body(r, s):
+        nxt = jax.random.split(r)
+        return jnp.where(s, nxt[0], r), jnp.where(s, nxt[1], r)
+    return lax.scan(body, rng, stoch)
+
+
+def _sample_row(lg_raw: jax.Array, key: jax.Array, temp: jax.Array,
+                top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """One logits row (V,) -> token id, with TRACED per-slot params.
+
+    Bit-matches :func:`sample_local` on the same row: greedy
+    (``temp <= 0``) is argmax of the raw row and touches no RNG bits;
+    otherwise the same filter order (temperature -> top-k -> top-p, each
+    re-sorting the already-filtered row exactly like the host path) and
+    the same categorical draw — a (V,) gumbel stream generates the same
+    bits as the host's (1, V) call, so fused == synced token for token.
+    """
+    V = lg_raw.shape[-1]
+    lg = lg_raw / jnp.maximum(temp, 1e-6)
+    asc = jnp.sort(lg, -1)
+    kth = lax.dynamic_index_in_dim(asc, V - jnp.clip(top_k, 1, V), 0,
+                                   keepdims=False)
+    lg = jnp.where((top_k > 0) & (lg < kth), -jnp.inf, lg)
+    desc = jnp.sort(lg, -1)[::-1]
+    probs = jax.nn.softmax(desc, -1)
+    cum = jnp.cumsum(probs, -1)
+    keep = cum - probs < top_p
+    cutoff = jnp.max(jnp.where(keep, desc, -jnp.inf), -1)
+    lg = jnp.where((top_p < 1.0) & (lg < cutoff), -jnp.inf, lg)
+    stoch_tok = jax.random.categorical(key, lg, -1)
+    return jnp.where(temp <= 0.0, jnp.argmax(lg_raw, -1),
+                     stoch_tok).astype(jnp.int32)
+
+
+def sample_batched(logits: jax.Array, rng: jax.Array, temps: jax.Array,
+                   top_ks: jax.Array, top_ps: jax.Array,
+                   active: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Fused per-slot sampling: (B, V) full logits -> ((B,) ids, rng').
+
+    One jitted call samples every slot — per-slot ``temps/top_ks/top_ps``
+    are device arrays, so mixed greedy/stochastic batches share one
+    program.  ``active`` (B,) masks idle slots: they draw a don't-care
+    token and, like greedy rows, consume NO rng, preserving the host
+    loop's split order for the slots that do.
+    """
+    if active is None:
+        active = jnp.ones(temps.shape, bool)
+    stoch = active & (temps > 0.0)
+    rng, keys = split_rng_chain(rng, stoch)
+    toks = jax.vmap(_sample_row)(logits.astype(jnp.float32), keys, temps,
+                                 top_ks, top_ps)
+    return toks, rng
+
+
+def sample_sharded_batched(logits_loc: jax.Array, rng: jax.Array,
+                           temps: jax.Array, top_ks: jax.Array,
+                           top_ps: jax.Array,
+                           active: Optional[jax.Array],
+                           axis_name: Optional[str], tp: int
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Fused per-slot sampling over vocab-sharded logits (B, V/tp).
+
+    The ring form of :func:`sample_batched` for use INSIDE ``shard_map``:
+    each rank pre-selects its local top-``MAX_LOCAL_K`` candidates, only
+    the (tp x k) candidate set is all-gathered, and the filtered draw
+    runs on that — the full vocabulary row never leaves the ranks.
+    Every rank consumes the identical rng chain, so the sampled ids (and
+    the new rng) come out replicated without a broadcast.  Greedy rows
+    reduce to argmax over the candidate set == the global argmax.
     """
     if axis_name is None or tp == 1:
-        return sample_local(logits_loc, rng, params)
+        return sample_batched(logits_loc, rng, temps, top_ks, top_ps,
+                              active)
+    if active is None:
+        active = jnp.ones(temps.shape, bool)
     B, v_loc = logits_loc.shape
     k = min(MAX_LOCAL_K, v_loc)
     vals, idx = lax.top_k(logits_loc.astype(jnp.float32), k)
     r = lax.axis_index(axis_name)
     gidx = idx + r * v_loc
-    vals_all = lax.all_gather(vals, axis_name, axis=1)    # (B, tp, k)
-    gidx_all = lax.all_gather(gidx, axis_name, axis=1)
-    vals_all = vals_all.reshape(B, tp * k)
-    gidx_all = gidx_all.reshape(B, tp * k)
-    chosen = sample_local(vals_all, rng, params)          # (B,) in [0,tp*k)
-    return jnp.take_along_axis(gidx_all, chosen[:, None], 1)[:, 0]
+    vals_all = lax.all_gather(vals, axis_name, axis=1).reshape(B, tp * k)
+    gidx_all = lax.all_gather(gidx, axis_name, axis=1).reshape(B, tp * k)
+    stoch = active & (temps > 0.0)
+    rng, keys = split_rng_chain(rng, stoch)
+    chosen = jax.vmap(_sample_row)(vals_all, keys, temps, top_ks, top_ps)
+    toks = jnp.take_along_axis(gidx_all, chosen[:, None], 1)[:, 0]
+    return toks.astype(jnp.int32), rng
+
+
+def sample_sharded(logits_loc: jax.Array, rng: jax.Array,
+                   params: SamplingParams, axis_name: Optional[str],
+                   tp: int) -> jax.Array:
+    """logits_loc: (B, V/tp) vocab-sharded -> (B,) global token ids.
+
+    Single-call convenience form of :func:`sample_sharded_batched`
+    (one static ``SamplingParams`` broadcast across the batch) — a thin
+    delegate, so the ring sampling path has exactly ONE implementation,
+    the one the serving engine jits and tests.
+    """
+    B = logits_loc.shape[0]
+    toks, _ = sample_sharded_batched(
+        logits_loc, rng,
+        jnp.full((B,), params.temperature, jnp.float32),
+        jnp.full((B,), params.top_k, jnp.int32),
+        jnp.full((B,), params.top_p, jnp.float32),
+        None, axis_name, tp)
+    return toks

@@ -175,6 +175,35 @@ class Scheduler:
                 preempted.append(victim)
         return preempted
 
+    def reserve_lookahead(self, steps: int) -> bool:
+        """All-or-nothing block reservation for a multi-step decode window.
+
+        The engine's fused ``steps_per_sync`` window runs ``steps`` decode
+        steps in one device program, so every active sequence must own
+        the blocks its next ``steps`` tokens land in BEFORE dispatch —
+        there is no host boundary mid-window to allocate at.  Unlike
+        :meth:`ensure_decode_capacity` this NEVER preempts: speculative
+        lookahead must not evict resident work, so on shortfall nothing
+        is allocated and the caller falls back to single-step dispatch
+        (where the usual grow-or-preempt policy applies).
+        """
+        if self.pool is None:
+            return True
+        needs = []
+        for seq in self.active:
+            if seq is None:
+                continue
+            target = min(seq.pos + steps, self.max_seq)
+            short = blocks_for(target, self.pool.block_size) \
+                - len(seq.blocks)
+            if short > 0:
+                needs.append((seq, short))
+        if sum(n for _, n in needs) > self.pool.num_free:
+            return False
+        for seq, n in needs:
+            seq.blocks.extend(self.pool.alloc(n))
+        return True
+
     def _pick_victim(self, exclude: SeqSlot) -> Optional[SeqSlot]:
         cands = [s for s in self.active
                  if s is not None and s is not exclude]

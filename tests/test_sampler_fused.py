@@ -1,0 +1,142 @@
+"""Fused (in-jit, batched) sampling vs the host-loop oracle.
+
+The serving engine's fused decode program samples every slot in one
+call (`sample_batched`) with per-slot params as device arrays and the
+rng chain carried on device (`split_rng_chain`).  These tests pin the
+bit-level contract that makes fused and host (synced) engines produce
+identical token streams: same filter math per row, same rng-split
+order (only active stochastic slots consume), greedy never touches RNG.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.sampler import (SamplingParams, sample_batched,
+                                   sample_local, split_rng_chain)
+
+V = 97          # odd vocab so clamp/padding edges are exercised
+
+
+def _host_loop(logits, rng, slot_params, active=None):
+    """The engine's pre-fusion host path: visit slots in order, greedy
+    rows argmax, stochastic rows split-then-sample_local."""
+    B = logits.shape[0]
+    active = [True] * B if active is None else active
+    toks = []
+    for i in range(B):
+        p = slot_params[i]
+        if not active[i]:
+            toks.append(-1)
+            continue
+        if p.temperature <= 0.0:
+            toks.append(int(np.argmax(np.asarray(logits[i]))))
+            continue
+        rng, sub = jax.random.split(rng)
+        toks.append(int(sample_local(logits[i][None], sub, p)[0]))
+    return toks, rng
+
+
+@pytest.fixture(scope="module")
+def logits():
+    return jax.random.normal(jax.random.PRNGKey(3), (5, V),
+                             jnp.float32) * 4.0
+
+
+# -- satellite regression: top_k > vocab must clamp, not crash ----------
+
+def test_sample_local_topk_exceeds_vocab(logits):
+    rng = jax.random.PRNGKey(0)
+    big = sample_local(logits, rng, SamplingParams(0.8, V + 50, 1.0))
+    full = sample_local(logits, rng, SamplingParams(0.8, V, 1.0))
+    # clamped k == V keeps every entry -> identical to the k=V draw
+    assert big.tolist() == full.tolist()
+    assert all(0 <= t < V for t in big.tolist())
+
+
+def test_sample_local_topk_exact_vocab_edge(logits):
+    rng = jax.random.PRNGKey(1)
+    # k=V thresholds at the MINIMUM logit -> no entry filtered: same
+    # draw as plain temperature sampling
+    plain = sample_local(logits, rng, SamplingParams(0.7, 0, 1.0))
+    kfull = sample_local(logits, rng, SamplingParams(0.7, V, 1.0))
+    assert plain.tolist() == kfull.tolist()
+
+
+# -- rng chain ----------------------------------------------------------
+
+def test_split_rng_chain_matches_sequential():
+    rng = jax.random.PRNGKey(42)
+    stoch = jnp.array([True, False, True, True, False])
+    new_rng, keys = jax.jit(split_rng_chain)(rng, stoch)
+    r = jax.random.PRNGKey(42)
+    for i, s in enumerate(stoch.tolist()):
+        if s:
+            r, sub = jax.random.split(r)
+            assert keys[i].tolist() == sub.tolist(), i
+    assert new_rng.tolist() == r.tolist()
+
+
+def test_split_rng_chain_all_greedy_is_identity():
+    rng = jax.random.PRNGKey(7)
+    new_rng, _ = split_rng_chain(rng, jnp.zeros((4,), bool))
+    assert new_rng.tolist() == rng.tolist()
+
+
+# -- fused == host, bit for bit ----------------------------------------
+
+MIXED = [SamplingParams(0.0, 0, 1.0),        # greedy
+         SamplingParams(0.9, 10, 1.0),       # top-k
+         SamplingParams(1.1, 0, 0.9),        # top-p
+         SamplingParams(0.7, 2 * V, 0.95),   # both, k over-vocab
+         SamplingParams(0.8, 0, 1.0)]        # temperature only
+
+
+def _as_arrays(slot_params):
+    return (jnp.asarray([p.temperature for p in slot_params], jnp.float32),
+            jnp.asarray([p.top_k for p in slot_params], jnp.int32),
+            jnp.asarray([p.top_p for p in slot_params], jnp.float32))
+
+
+def test_sample_batched_matches_host_loop(logits):
+    rng = jax.random.PRNGKey(5)
+    want, want_rng = _host_loop(logits, rng, MIXED)
+    temps, tks, tps = _as_arrays(MIXED)
+    got, got_rng = jax.jit(sample_batched)(logits, rng, temps, tks, tps)
+    assert got.tolist() == want
+    assert got_rng.tolist() == want_rng.tolist()
+
+
+def test_sample_batched_inactive_slots_consume_no_rng(logits):
+    rng = jax.random.PRNGKey(9)
+    active = [True, False, True, False, True]
+    want, want_rng = _host_loop(logits, rng, MIXED, active)
+    temps, tks, tps = _as_arrays(MIXED)
+    got, got_rng = sample_batched(logits, rng, temps, tks, tps,
+                                  jnp.asarray(active))
+    for i, a in enumerate(active):
+        if a:
+            assert int(got[i]) == want[i], i
+    assert got_rng.tolist() == want_rng.tolist()
+
+
+def test_sample_batched_all_greedy_rng_untouched(logits):
+    rng = jax.random.PRNGKey(13)
+    temps = jnp.zeros((5,), jnp.float32)
+    got, got_rng = sample_batched(logits, rng, temps,
+                                  jnp.zeros((5,), jnp.int32),
+                                  jnp.ones((5,), jnp.float32))
+    assert got.tolist() == np.argmax(np.asarray(logits), -1).tolist()
+    assert got_rng.tolist() == rng.tolist()
+
+
+@pytest.mark.parametrize("params", MIXED[1:],
+                         ids=["topk", "topp", "both-overk", "temp"])
+def test_sample_batched_uniform_params_parity(logits, params):
+    """Every filter combination separately, whole batch one param set."""
+    rng = jax.random.PRNGKey(21)
+    want, want_rng = _host_loop(logits, rng, [params] * 5)
+    temps, tks, tps = _as_arrays([params] * 5)
+    got, got_rng = sample_batched(logits, rng, temps, tks, tps)
+    assert got.tolist() == want
+    assert got_rng.tolist() == want_rng.tolist()
