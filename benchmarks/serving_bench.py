@@ -24,7 +24,15 @@ statistics the paged refactor targets:
   steps per sync through one lax.scan window — host syncs drop ~Nx.
   Each row also records the KV stream tile (``block_s``, overridable
   with ``--block-s``) next to the ``plan_block_s`` recommendation so
-  real-hardware sweeps can tune the tile against the planner.
+  real-hardware sweeps can tune the tile against the planner,
+* **decode-stall accounting (standdown vs interleaved)** — the
+  tail-latency contrast of chunked prefill: on a trace with a LONG
+  prompt landing mid-decode, the ``paged-stream-standdown`` row runs
+  monolithic bucketed prefills that freeze every in-flight stream
+  (``decode_stalls`` counts those launches) while the
+  ``paged-stream-interleaved`` row (``--prefill-chunk`` tokens/step)
+  runs one prefill chunk AND one decode window per step —
+  ``decode_stalls`` must be zero and the token streams bit-identical.
 
     PYTHONPATH=src python benchmarks/serving_bench.py --requests 16
 
@@ -69,12 +77,13 @@ from repro.serving.engine import LPUEngine, MultiRingEngine  # noqa: E402
 
 def run_engine(model, params, prompts, *, slots, max_seq, max_new,
                paged, block_size=0, num_blocks=0, paged_kernel="auto",
-               sampling="fused", steps_per_sync=1, block_s=0):
+               sampling="fused", steps_per_sync=1, block_s=0,
+               prefill_chunk=0):
     eng = LPUEngine(model, params, slots=slots, max_seq=max_seq,
                     paged=paged, block_size=block_size,
                     num_blocks=num_blocks, paged_kernel=paged_kernel,
                     sampling=sampling, steps_per_sync=steps_per_sync,
-                    block_s=block_s)
+                    block_s=block_s, prefill_chunk=prefill_chunk)
     outs = eng.generate(prompts, max_new_tokens=max_new)
     assert all(len(o) == max_new for o in outs)
     return eng, outs
@@ -174,7 +183,8 @@ REQUIRED_ROW_KEYS = {"mode", "tokens_per_s", "ms_per_token", "occupancy",
                      "sampling", "steps_per_sync", "host_syncs",
                      "prefill_syncs", "syncs_per_token",
                      "bytes_to_host_per_token", "overrun_tokens",
-                     "block_s", "planned_block_s"}
+                     "block_s", "planned_block_s",
+                     "prefill_chunk", "prefill_chunks", "decode_stalls"}
 
 
 def validate_bench(out: dict) -> None:
@@ -187,7 +197,8 @@ def validate_bench(out: dict) -> None:
         raise ValueError("BENCH schema: empty rows")
     modes = {r["mode"] for r in out["rows"]}
     for want in ("dense", "paged-gather", "paged-stream",
-                 "paged-stream-synced"):
+                 "paged-stream-synced", "paged-stream-standdown",
+                 "paged-stream-interleaved"):
         if want not in modes:
             raise ValueError(f"BENCH schema: missing row {want!r}")
     if not any(m.startswith("paged-stream-fused-s") for m in modes):
@@ -230,6 +241,9 @@ def main():
     ap.add_argument("--block-s", type=int, default=0,
                     help="KV stream tile override (0 = planned default; "
                          "recorded per row for hardware tuning sweeps)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunk size of the interleaved-prefill row "
+                         "(paged-stream-interleaved)")
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: validate the result schema and "
@@ -237,6 +251,10 @@ def main():
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="result file written in --smoke mode")
     args = ap.parse_args()
+    if args.prefill_chunk < 1:
+        ap.error("--prefill-chunk must be >= 1: the interleaved row "
+                 "exists to contrast chunked admission with the "
+                 "monolithic standdown row")
     # the multi-step row's window size (>= 2 so the contrast exists)
     S = max(args.steps_per_sync, 2)
     if args.smoke:
@@ -267,6 +285,10 @@ def main():
                                    slots=args.slots, max_seq=args.max_seq,
                                    max_new=args.max_new, paged=False,
                                    block_s=args.block_s)
+    # every row's token streams are asserted against a reference trace
+    # run — dense for the shared-trace rows, the monolithic standdown
+    # run for the interleave pair (which adds a long prompt)
+    engines = [("dense", dense, dense_outs, dense_outs)]
     # paged pool sized at half the dense capacity: enough for the trace's
     # resident tokens, impossible for a dense allocator.  Same pool, two
     # dataflows: the gather oracle (contiguous per-request copy each
@@ -280,18 +302,17 @@ def main():
     # the streamed kernel's tile is structurally the pool block size, so
     # a --block-s override only reaches the gather/dense flash chunk
     stream_bs = args.block_s if args.block_s == args.block_size else 0
-    engines = [("dense", dense, dense_outs)]
     for kern, bs in (("gather", args.block_s), ("stream", stream_bs)):
         eng, outs = run_engine(model, params, prompts,
                                paged_kernel=kern, block_s=bs, **paged_kw)
-        engines.append((f"paged-{kern}", eng, outs))
+        engines.append((f"paged-{kern}", eng, outs, dense_outs))
     # the synced-vs-fused contrast (paper C1 on-chip sampling): same
     # streamed pool, three host-loop disciplines — full logits row to
     # host per token, fused 1-step (token ids only), fused multi-step
     # (steps_per_sync tokens per readback)
     eng, outs = run_engine(model, params, prompts, paged_kernel="stream",
                            sampling="host", block_s=stream_bs, **paged_kw)
-    engines.append(("paged-stream-synced", eng, outs))
+    engines.append(("paged-stream-synced", eng, outs, dense_outs))
     # multi-step windows reserve their whole lookahead up front and
     # NEVER preempt for it, so at the half-capacity pool above the
     # engine would (correctly) degrade to single-step under pressure —
@@ -301,11 +322,32 @@ def main():
     eng, outs = run_engine(model, params, prompts, paged_kernel="stream",
                            sampling="fused", steps_per_sync=S,
                            block_s=stream_bs, **msd_kw)
-    engines.append((f"paged-stream-fused-s{S}", eng, outs))
+    engines.append((f"paged-stream-fused-s{S}", eng, outs, dense_outs))
+    # the interleave contrast (streamlined-dataflow latency claim): the
+    # SAME streamed engine, monolithic vs chunked admission, on the
+    # trace plus ONE LONG prompt that lands while short streams are
+    # mid-decode.  Monolithic ("standdown") freezes every in-flight
+    # stream for each full bucketed prefill (decode_stalls counts
+    # them); chunked ("interleaved", --prefill-chunk tokens/step) runs
+    # a prefill chunk AND a decode window per step, so decode_stalls
+    # must be ZERO while the token streams stay bit-identical.  Both
+    # get the dense-equivalent pool so the contrast is purely the
+    # admission policy, not preemption noise.
+    long_len = args.max_seq - args.max_new - 2
+    il_prompts = prompts + [list(rng.randint(1, cfg.vocab_size,
+                                             size=long_len))]
+    sd_eng, sd_outs = run_engine(model, params, il_prompts,
+                                 paged_kernel="stream",
+                                 block_s=stream_bs, **msd_kw)
+    engines.append(("paged-stream-standdown", sd_eng, sd_outs, sd_outs))
+    eng, outs = run_engine(model, params, il_prompts,
+                           paged_kernel="stream", block_s=stream_bs,
+                           prefill_chunk=args.prefill_chunk, **msd_kw)
+    engines.append(("paged-stream-interleaved", eng, outs, sd_outs))
 
     bucket_bound = int(math.log2(args.max_seq)) + 1
     rows = []
-    for name, eng, outs in engines:
+    for name, eng, outs, ref_outs in engines:
         st = eng.stats
         rows.append({
             "mode": name,
@@ -321,7 +363,7 @@ def main():
             "kv_moved_bytes_per_step": eng.kv_bytes_moved_per_step(),
             "pool_peak_blocks": st.peak_pool_blocks,
             "pool_blocks": (eng.num_blocks - 1 if eng.paged else 0),
-            "same_output_as_dense": outs == dense_outs,
+            "same_output_as_dense": outs == ref_outs,
             # measured from the lowered program, not the formula
             "view_tensors_in_program": (view_tensor_count(eng)
                                         if eng.paged else None),
@@ -335,6 +377,9 @@ def main():
             "overrun_tokens": st.overrun_tokens,
             "block_s": eng.decode_block_s(),
             "planned_block_s": eng.planned_block_s(),
+            "prefill_chunk": eng.prefill_chunk,
+            "prefill_chunks": st.prefill_chunks,
+            "decode_stalls": st.decode_stalls,
         })
     scaling_rows, ring_stats = [], []
     if args.tp > 1:
@@ -375,6 +420,9 @@ def main():
                   f"[{r['sampling']}, S={r['steps_per_sync']}, "
                   f"block_s {r['block_s']} "
                   f"(planned {r['planned_block_s']})]")
+            print(f"  {'':>22}  prefill_chunk {r['prefill_chunk']}  "
+                  f"chunks {r['prefill_chunks']}  "
+                  f"decode_stalls {r['decode_stalls']}")
         print(f"  bucketed prefill traces <= log2(max_seq)+1 = "
               f"{bucket_bound} (vs {distinct_lengths} distinct lengths); "
               f"outputs identical: {out['same_output']}")
@@ -430,6 +478,28 @@ def main():
         (dec_syncs_n, dec_syncs_1,
          f"steps_per_sync={S} should cut decode host syncs ~{S}x "
          "(>= S/2 required)")
+    # interleave gates (streamlined-dataflow latency claim): chunked
+    # admission must dispatch decode windows on EVERY step — zero
+    # full-prefill decode stalls even with a long prompt landing
+    # mid-decode — while the monolithic standdown run stalls its
+    # in-flight streams once per prefill launched; token streams must
+    # be bit-identical between the two admission policies.
+    sd = by_mode["paged-stream-standdown"]
+    il = by_mode["paged-stream-interleaved"]
+    assert il["same_output_as_dense"], \
+        "chunked prefill diverged from monolithic on the same trace"
+    assert il["decode_stalls"] == 0, \
+        (il["decode_stalls"],
+         "interleaved admission must never stall decode on a prefill")
+    assert il["prefill_chunks"] > 0, "interleaved row ran no chunks"
+    if args.slots > 1:
+        # with a single slot every monolithic admission happens into an
+        # idle engine (nothing in flight to stall), so the >=1 gate
+        # only holds once streams can decode while another admits
+        assert sd["decode_stalls"] >= 1, \
+            (sd["decode_stalls"],
+             "standdown baseline should stall decode at least once "
+             "(long prompt admitted mid-decode)")
     if args.smoke:
         validate_bench(out)
         Path(args.out).write_text(json.dumps(out, indent=2),

@@ -145,6 +145,101 @@ def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
     return x + y, {"k": kc, "v": vc}
 
 
+def chunk_prefill_layer(p: Params, x: jax.Array,
+                        cache: Dict[str, jax.Array],
+                        block_table: jax.Array, start: jax.Array,
+                        n_valid: jax.Array, *, cfg, plan,
+                        use_kernels: bool = True, interpret: bool = True,
+                        paged_kernel: str = "auto"
+                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decoder layer over ONE prefill chunk, single device.
+
+    The prefill-with-initial-carry entry of the streamed chain: a chunk
+    of C prompt tokens runs through the SAME streamed ops as decode —
+    the fused QKV / O / FC gemvs simply carry C rows instead of one,
+    and attention REUSES the paged decode kernel's online-softmax fold
+    by treating the chunk as a batch of C single-token queries with
+    per-query valid lengths ``start + i + 1`` over the request's
+    (broadcast) block table.  Causality over history + the chunk's own
+    causal prefix falls out of the kernel's length masking; nothing new
+    is lowered for prefill.
+
+    x: (C, D) chunk activations; cache: {'k','v': (N, bs, G, dh)} the
+    shared pool; block_table: (T,); start: absolute offset of the chunk;
+    n_valid: valid rows (padded tail rows land in the null block 0).
+    Returns (y (C, D), updated pool).
+    """
+    a = plan.attn
+    C, D = x.shape
+    qpr, kpr, dh = a.q_per_rank, a.kv_per_rank, a.d_head
+
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    wq = p["attn"]["wq"].reshape(D, qpr * dh)
+    wk = p["attn"]["wk"].reshape(D, kpr * dh)
+    wv = p["attn"]["wv"].reshape(D, kpr * dh)
+    wqkv = jnp.concatenate([wq, wk, wv], -1)
+    bqkv = None
+    if "bq" in p["attn"]:
+        bqkv = jnp.concatenate([p["attn"][k].reshape(-1)
+                                for k in ("bq", "bk", "bv")])
+    qkv = _mm(h, wqkv, bqkv, use_kernels=use_kernels, interpret=interpret)
+    q, k_new, v_new = jnp.split(qkv, [qpr * dh, (qpr + kpr) * dh], -1)
+    q = q.reshape(C, qpr, dh)
+    k_new = k_new.reshape(C, kpr, dh)
+    v_new = v_new.reshape(C, kpr, dh)
+    positions = start + jnp.arange(C, dtype=jnp.int32)
+    if cfg.positional == "rope":
+        q = apply_rope(q[None], positions[None], cfg.rope_theta)[0]
+        k_new = apply_rope(k_new[None], positions[None], cfg.rope_theta)[0]
+
+    from repro.serving.kv_cache import scatter_chunk_rows
+    valid = positions < start + n_valid
+    kc = scatter_chunk_rows(cache["k"], k_new, block_table, positions,
+                            valid)
+    vc = scatter_chunk_rows(cache["v"], v_new, block_table, positions,
+                            valid)
+    bs_blk = kc.shape[1]
+    lens = jnp.minimum(positions + 1, start + n_valid)
+    mode = resolve_paged_kernel(plan, bs_blk, paged_kernel,
+                                interpret=interpret)
+    if mode == "stream":
+        tabs = jnp.broadcast_to(block_table[None],
+                                (C, block_table.shape[0]))
+        attn = paged_decode_attention(q, kc, vc, tabs, lens,
+                                      use_pallas=use_kernels,
+                                      interpret=interpret)
+    else:
+        T = block_table.shape[0]
+        k_view = jnp.broadcast_to(
+            kc[block_table].reshape(1, T * bs_blk, *kc.shape[2:]),
+            (C, T * bs_blk) + kc.shape[2:])
+        v_view = jnp.broadcast_to(
+            vc[block_table].reshape(1, T * bs_blk, *vc.shape[2:]),
+            (C, T * bs_blk) + vc.shape[2:])
+        attn = decode_attention(q, k_view, v_view, lens,
+                                use_pallas=use_kernels,
+                                interpret=interpret)
+    wo = p["attn"]["wo"].reshape(qpr * dh, D)
+    x = x + _mm(attn.reshape(C, -1), wo, None, use_kernels=use_kernels,
+                interpret=interpret)
+
+    h = apply_norm(p["ln2"], x, cfg.norm)
+    if "wg" in p["mlp"]:
+        w1 = jnp.concatenate([p["mlp"]["wg"], p["mlp"]["wu"]], -1)
+        gu = _mm(h, w1, None, use_kernels=use_kernels, interpret=interpret)
+        g, u = jnp.split(gu, 2, -1)
+        act = jax.nn.silu(g) * u if cfg.activation == "silu" else \
+            jax.nn.gelu(g) * u
+    else:
+        act = _mm(h, p["mlp"]["wi"], p["mlp"].get("bi"),
+                  use_kernels=use_kernels, interpret=interpret)
+        act = jax.nn.relu(act) if cfg.activation == "relu" else \
+            jax.nn.gelu(act)
+    y = _mm(act, p["mlp"]["wd"], p["mlp"].get("bd"),
+            use_kernels=use_kernels, interpret=interpret)
+    return x + y, {"k": kc, "v": vc}
+
+
 def stream_bytes_per_layer(cfg, plan, kv_len: int) -> int:
     """Analytic bytes streamed per token per layer (latency model input)."""
     a = plan.attn

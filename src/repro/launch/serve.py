@@ -25,7 +25,10 @@ inside the jitted decode program, only token ids reach the host — the
 paper's on-chip "sampling with sort"; host = the synced baseline that
 ships the full logits row per token), ``--steps-per-sync N`` (run N
 decode steps per host readback via one lax.scan window), ``--block-s``
-(override the planned KV stream tile / flash chunk for hardware tuning).
+(override the planned KV stream tile / flash chunk for hardware tuning),
+``--prefill-chunk C`` (chunked prefill: prompts become resident C tokens
+per step, interleaved with decode windows, so a long prompt never stalls
+in-flight streams — 0 = today's monolithic bucketed prefill).
 """
 from __future__ import annotations
 
@@ -92,6 +95,11 @@ def main():
     ap.add_argument("--block-s", type=int, default=0,
                     help="KV stream tile / flash chunk override threaded "
                          "to plan_block_s (0 = planned default)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: make prompts resident N "
+                         "tokens per step, interleaved with decode "
+                         "windows (paged only; 0 = monolithic bucketed "
+                         "prefill)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -119,7 +127,8 @@ def main():
                      paged_kernel=args.paged_kernel,
                      sampling=args.sampling,
                      steps_per_sync=args.steps_per_sync,
-                     block_s=args.block_s)
+                     block_s=args.block_s,
+                     prefill_chunk=args.prefill_chunk)
     if rings > 1:
         engine = MultiRingEngine(model, params, mesh, ring_size=tp,
                                  **engine_kw)
@@ -166,6 +175,9 @@ def main():
               f"overrun={st.overrun_tokens}, "
               f"block_s={first.decode_block_s()} "
               f"(planned {first.planned_block_s()})")
+        print(f"[serve] prefill_chunk={first.prefill_chunk}: "
+              f"{st.prefill_chunks} chunks, "
+              f"decode_stalls={st.decode_stalls}")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o[:12]}")
 

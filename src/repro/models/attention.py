@@ -268,6 +268,84 @@ def prefill_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
     return out_proj(p, out, env, plan), new_cache
 
 
+def chunk_prefill_attention(p: Params, x: jax.Array, *, cfg, plan,
+                            env: AxisEnv, positions: jax.Array,
+                            cache: Dict[str, jax.Array],
+                            block_table: jax.Array,
+                            kv_valid_len: jax.Array,
+                            paged_kernel: str = "auto"
+                            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill ONE chunk of a partially-resident prompt against the pool.
+
+    The entry point behind the engine's ``--prefill-chunk`` interleave:
+    instead of one monolithic bucketed prefill, the prompt arrives in
+    fixed-size chunks whose KV is written *incrementally* into the
+    shared block pool, and each chunk's queries attend to the full
+    resident history (earlier chunks, or a preempted request's
+    recomputed tokens) plus the causal prefix of the chunk itself.
+
+    x:            (1, C, D[/tp]) the chunk activations (C is static —
+                  ONE trace total, vs O(log2 max_seq) pow2 buckets)
+    positions:    (1, C) absolute positions ``start + [0..C)``
+    cache:        {'k','v': (N, bs, kpr, dh)} the shared block pool
+                  (rank-local head shard under ring tp, like decode)
+    block_table:  (1, T) this request's physical block ids
+    kv_valid_len: scalar — total resident tokens AFTER this chunk
+                  (start + valid rows; padded tail rows beyond it are
+                  routed to the null block and masked on read).
+
+    Dataflow mirrors decode's ``paged_kernel`` seam:
+
+    * ``"stream"`` — the chunk IS a batch for the paged Pallas kernel:
+      C queries with per-query valid lengths ``pos + 1`` share the
+      request's (broadcast) block table, so causality falls out of the
+      kernel's own length masking and the per-position online-softmax
+      fold — the same no-copy KV stream as decode, reused for prefill.
+    * ``"gather"`` — reference oracle: materialize the contiguous view
+      through the table and run the chunked flash prefill with
+      ``q_offset`` carrying the chunk's absolute position.
+
+    Both scatter the chunk's K/V into the pool FIRST (the fold then
+    covers self + history through one length mask), and both return the
+    full updated pool as the new cache — the scan carry aliases it in
+    place, so per chunk only the C new rows are written.
+    """
+    from repro.serving.kv_cache import scatter_chunk_rows
+    a = plan.attn
+    q, k, v = qkv_proj(p, x, env, plan)
+    if cfg.positional == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    table = block_table[0]
+    pos = positions[0]
+    valid = pos < kv_valid_len
+    kc = scatter_chunk_rows(cache["k"], k[0], table, pos, valid)
+    vc = scatter_chunk_rows(cache["v"], v[0], table, pos, valid)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = kc, vc
+
+    C = q.shape[1]
+    bs = kc.shape[1]
+    mode = resolve_paged_kernel(plan, bs, paged_kernel)
+    if mode == "stream":
+        # per-query causal span: history + self (clamped for pad rows)
+        lens = jnp.minimum(pos + 1, kv_valid_len)
+        tabs = jnp.broadcast_to(table[None], (C, table.shape[0]))
+        out = paged_decode_attention(
+            q[0], kc, vc, tabs, lens, use_pallas=True,
+            interpret=da_ops.default_interpret())[None]
+    else:
+        T = table.shape[0]
+        kview = kc[table].reshape(1, T * bs, kc.shape[2], kc.shape[3])
+        vview = vc[table].reshape(1, T * bs, vc.shape[2], vc.shape[3])
+        kmap = local_kmap(plan, env)
+        ke = _expand_kv(kview, kmap, a.q_per_rank)
+        ve = _expand_kv(vview, kmap, a.q_per_rank)
+        out = flash_attention(q, ke, ve, causal=True, q_offset=pos[:1],
+                              kv_valid_len=kv_valid_len[None])
+    return out_proj(p, out, env, plan), new_cache
+
+
 def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                      cache: Dict[str, jax.Array], positions: jax.Array,
                      block_table: Optional[jax.Array] = None,

@@ -54,12 +54,15 @@ class Model:
     def forward(self, params: Params, tokens: jax.Array, *, env: AxisEnv,
                 mode: str, positions=None, cache=None, frames=None,
                 patch_embeds=None, block_tables=None, paged_kernel="auto",
-                block_s=0, gather_fn=None):
+                block_s=0, kv_valid_len=None, gather_fn=None):
         if self.cfg.family == "encdec":
             if block_s:
                 raise ValueError(
                     "block_s override is not supported for encdec "
                     "decode (no paged/flash-chunk seam to tune)")
+            if mode == "chunk_prefill":
+                raise ValueError("chunked prefill needs the paged pool; "
+                                 "encdec has no paged cache")
             return wh.forward_encdec(
                 params, tokens, cfg=self.cfg, plan=self.plan, env=env,
                 mode=mode, frames=frames, positions=positions, cache=cache,
@@ -68,7 +71,7 @@ class Model:
             params, tokens, cfg=self.cfg, plan=self.plan, env=env, mode=mode,
             positions=positions, cache=cache, patch_embeds=patch_embeds,
             block_tables=block_tables, paged_kernel=paged_kernel,
-            block_s=block_s, gather_fn=gather_fn)
+            block_s=block_s, kv_valid_len=kv_valid_len, gather_fn=gather_fn)
 
     # ---- decode cache -----------------------------------------------------
 

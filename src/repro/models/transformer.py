@@ -227,9 +227,16 @@ def apply_layer(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                 layer_idx: int, positions: jax.Array, mode: str,
                 cache: Optional[Params] = None,
                 block_tables: Optional[jax.Array] = None,
-                paged_kernel: str = "auto", block_s: int = 0
+                paged_kernel: str = "auto", block_s: int = 0,
+                kv_valid_len: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss).
+
+    ``mode="chunk_prefill"`` (attention-only stacks) prefills one chunk
+    of a partially-resident prompt straight against the paged pool:
+    ``cache`` is the pool, ``block_tables`` the request's table and
+    ``kv_valid_len`` the resident token count after this chunk.
+    """
     aux = jnp.float32(0.0)
     new_cache: Optional[Params] = dict(cache) if cache is not None else None
 
@@ -265,6 +272,13 @@ def apply_layer(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                 p["attn"], h_in, cfg=cfg, plan=plan, env=env,
                 positions=positions, cache=cache)
             new_cache = kv
+        elif mode == "chunk_prefill":
+            h, kv = attn_mod.chunk_prefill_attention(
+                p["attn"], h_in, cfg=cfg, plan=plan, env=env,
+                positions=positions, cache=cache,
+                block_table=block_tables, kv_valid_len=kv_valid_len,
+                paged_kernel=paged_kernel)
+            new_cache = kv
         else:
             h = attn_mod.self_attention(
                 p["attn"], h_in, cfg=cfg, plan=plan, env=env,
@@ -290,7 +304,8 @@ def apply_super_block(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                       positions: jax.Array, mode: str,
                       cache: Optional[Params] = None,
                       block_tables: Optional[jax.Array] = None,
-                      paged_kernel: str = "auto", block_s: int = 0):
+                      paged_kernel: str = "auto", block_s: int = 0,
+                      kv_valid_len: Optional[jax.Array] = None):
     sb = super_block_size(cfg)
     aux_total = jnp.float32(0.0)
     new_cache: Dict[str, Any] = {}
@@ -301,7 +316,8 @@ def apply_super_block(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                                   mode=mode, cache=cj,
                                   block_tables=block_tables,
                                   paged_kernel=paged_kernel,
-                                  block_s=block_s)
+                                  block_s=block_s,
+                                  kv_valid_len=kv_valid_len)
         if cache is not None:
             new_cache[f"l{j}"] = cj2
         aux_total = aux_total + aux
@@ -368,9 +384,16 @@ def forward(params: Params, tokens: jax.Array, *, cfg, plan, env: AxisEnv,
             block_tables: Optional[jax.Array] = None,
             paged_kernel: str = "auto",
             block_s: int = 0,
+            kv_valid_len: Optional[jax.Array] = None,
             gather_fn=None):
     """Shared forward.  ``gather_fn(subtree_path, subtree)`` applies FSDP
     gathering (injected by the step builder; identity in smoke mode).
+
+    ``mode="chunk_prefill"`` rides the same non-decode scan (the pool
+    cache slices through the scan xs and restacks through its ys):
+    ``positions`` carry the chunk's absolute offsets, ``block_tables``
+    the request's table and ``kv_valid_len`` the post-chunk resident
+    length — see :func:`repro.models.attention.chunk_prefill_attention`.
 
     Returns (logits_sharded, new_cache, aux).
     """
@@ -410,7 +433,11 @@ def forward(params: Params, tokens: jax.Array, *, cfg, plan, env: AxisEnv,
         bp = gather_fn("block", bp)
         xc, nc, aux = apply_super_block(bp, xc, cfg=cfg, plan=plan, env=env,
                                         positions=positions, mode=mode,
-                                        cache=bc)
+                                        cache=bc,
+                                        block_tables=block_tables,
+                                        paged_kernel=paged_kernel,
+                                        block_s=block_s,
+                                        kv_valid_len=kv_valid_len)
         return (xc, auxc + aux), nc
 
     if plan.remat != "none":
@@ -445,6 +472,34 @@ def forward(params: Params, tokens: jax.Array, *, cfg, plan, env: AxisEnv,
 
         (x, aux_total, new_cache), _ = lax.scan(
             dec_body, (x, aux_total, cache),
+            (params["blocks"], jnp.arange(n_sb)), unroll=unroll)
+    elif mode == "chunk_prefill":
+        # chunk prefill: like decode, the pool rides the scan CARRY so
+        # XLA's while-loop buffer aliasing can keep the per-layer
+        # slice -> scatter -> write-back chain in place, instead of the
+        # xs->ys stacking (whose separate input/output buffers force a
+        # full pool copy per layer per chunk)
+        def chunk_body(carry, xs):
+            xc, auxc, cache_st = carry
+            bp, idx = xs
+            bp = gather_fn("block", bp)
+            sl = jax.tree.map(
+                lambda a: lax.dynamic_index_in_dim(a, idx, 0,
+                                                   keepdims=False),
+                cache_st)
+            xc, upd, aux = apply_super_block(
+                bp, xc, cfg=cfg, plan=plan, env=env, positions=positions,
+                mode=mode, cache=sl, block_tables=block_tables,
+                paged_kernel=paged_kernel, block_s=block_s,
+                kv_valid_len=kv_valid_len)
+            cache_st = jax.tree.map(
+                lambda st, u: lax.dynamic_update_index_in_dim(
+                    st, u.astype(st.dtype), idx, 0),
+                cache_st, upd)
+            return (xc, auxc + aux, cache_st), None
+
+        (x, aux_total, new_cache), _ = lax.scan(
+            chunk_body, (x, aux_total, cache),
             (params["blocks"], jnp.arange(n_sb)), unroll=unroll)
     else:
         (x, aux_total), new_cache = lax.scan(block_fn, (x, aux_total),

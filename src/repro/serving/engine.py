@@ -29,7 +29,14 @@ and the paged pool compose:
 * **Prefill** — per-request at batch 1, padded to power-of-two length
   buckets so the prefill jit traces O(log2 max_seq) times instead of
   once per distinct prompt length; the resulting KV is scattered into
-  the pool (or the slot's dense region).
+  the pool (or the slot's dense region).  With ``prefill_chunk=C`` the
+  monolith is replaced by CHUNKED prefill: the prompt becomes resident
+  C tokens per ``step()``, each chunk's KV written incrementally into
+  the pool while the same step still dispatches a decode window — so a
+  long prompt no longer freezes every in-flight stream for its whole
+  bucketed prefill (``EngineStats.decode_stalls`` measures exactly
+  that, and is structurally zero in chunked mode).  Token streams are
+  bit-identical to monolithic prefill for greedy decoding.
 * **Preemption** — when the pool is exhausted, the newest sequence is
   evicted and re-prefiled later (recompute), protecting old requests.
 * **Fused sampling (C1)** — by default the sampler runs INSIDE the
@@ -135,6 +142,13 @@ class EngineStats:
     prefill_syncs: int = 0        # ...of which sample a prefill row
     bytes_to_host: int = 0        # payload bytes of those readbacks
     overrun_tokens: int = 0       # sampled in a window, discarded by host
+    prefill_chunks: int = 0       # chunk launches (chunked prefill mode)
+    decode_stalls: int = 0        # monolithic prefills run while decode
+                                  # streams were in flight: each one
+                                  # froze every stream for a full
+                                  # bucketed prefill (chunked mode: 0 —
+                                  # a decode window dispatches in the
+                                  # same step as each chunk)
 
     @property
     def tokens_per_s(self) -> float:
@@ -174,7 +188,7 @@ class LPUEngine:
                  mesh=None, kv_budget_bytes: int = 0,
                  paged_kernel: str = "auto", sampling: str = "fused",
                  steps_per_sync: int = 1, pipeline: bool = True,
-                 block_s: int = 0):
+                 block_s: int = 0, prefill_chunk: int = 0):
         self.model = model
         self.cfg = model.cfg
         self.plan = model.plan
@@ -272,16 +286,32 @@ class LPUEngine:
                 f"block_size ({self.block_size}); block_s="
                 f"{self.block_s} conflicts (use block_size, or the "
                 "gather/dense paths where block_s sets the flash chunk)")
+        # chunked prefill (--prefill-chunk): prompts become resident C
+        # tokens per step, interleaved with decode windows, instead of
+        # one monolithic bucketed prefill that stalls every in-flight
+        # stream.  Needs the paged pool: chunk KV scatters incrementally
+        # through the block table (recurrent-state families fold every
+        # position into per-slot state and must prefill whole).
+        if prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk={prefill_chunk} must be >= 0")
+        if prefill_chunk and not self.paged:
+            raise ValueError(
+                "prefill_chunk needs the paged KV pool (attention-only "
+                "stacks); dense / recurrent-state caches prefill "
+                "monolithically")
+        self.prefill_chunk = int(prefill_chunk)
         self.sched = Scheduler(slots, max_seq, pool, min_bucket)
         self.stats = EngineStats()
         self._results: Dict[int, List[int]] = {}
         self._rid = 0
+        self._chunk_rr = -1           # admit_seq of the last chunk served
         self._buckets_traced: Set[int] = set()
         self._window_jits: Dict[int, Callable] = {}
         self._sample_one = jax.jit(self._sample_one_fn)
         if mesh is None:
             self._decode = jax.jit(self._decode_fn)
             self._prefill = jax.jit(self._prefill_fn)
+            self._prefill_chunk_fn = jax.jit(self._chunk_fn)
             self._write_pages = jax.jit(scatter_prefill_pages)
             self._write_dense = jax.jit(scatter_prefill_dense)
         else:
@@ -371,6 +401,33 @@ class LPUEngine:
                                        keepdims=False)
         return row, new_cache
 
+    def _chunk_fn(self, params, cache, tokens, table, start, n_valid):
+        """ONE prefill chunk of a partially-resident prompt.
+
+        Unlike :meth:`_prefill_fn` this runs straight against the
+        shared pool: the chunk's KV scatters incrementally through the
+        request's block ``table`` and its queries attend to the full
+        resident history (earlier chunks / recomputed tokens) via the
+        same paged dataflow as decode — see
+        :func:`repro.models.attention.chunk_prefill_attention`.
+
+        tokens: (1, C) with C static — ONE trace total for any prompt
+        mix (vs O(log2 max_seq) pow2 buckets); ``start`` (chunk offset)
+        and ``n_valid`` (valid rows; the tail chunk is padded) are
+        dynamic.  Returns (logits row of the chunk's last valid token —
+        meaningful only for the final chunk — and the updated pool).
+        """
+        C = tokens.shape[1]
+        positions = start + jnp.arange(C, dtype=jnp.int32)[None]
+        logits, new_cache, _ = self.model.forward(
+            params, tokens, env=self.env1, mode="chunk_prefill",
+            positions=positions, cache=cache, block_tables=table[None],
+            paged_kernel=self.paged_kernel or "gather",
+            kv_valid_len=start + n_valid)
+        row = lax.dynamic_index_in_dim(logits[0], n_valid - 1, 0,
+                                       keepdims=False)
+        return row, new_cache
+
     # -- ring-parallel (shard_map) step construction -------------------
 
     def _named(self, spec_tree):
@@ -444,6 +501,20 @@ class LPUEngine:
             return pre_sm(params, self._pf_zero[S], tokens, true_len)
 
         self._prefill = prefill
+        if self.paged:
+            # chunked prefill against the ring-sharded pool: the pool
+            # rides in/out with the mapper's specs (head dim 1/tp per
+            # rank, same block ids everywhere), tokens/table/offsets are
+            # replicated host state and the logits row comes out
+            # vocab-sharded exactly like the monolithic prefill's.
+            def chunk(params, cache, tokens, table, start, n_valid):
+                return self._chunk_fn(params, cache, tokens, table,
+                                      start, n_valid)
+            self._prefill_chunk_fn = jax.jit(shard_map(
+                chunk, mesh=mesh,
+                in_specs=(specs, cspecs, P(None, None), P(None), P(),
+                          P()),
+                out_specs=(P(m), cspecs), check_vma=False))
         self._write_pages = jax.jit(scatter_prefill_pages,
                                     out_shardings=cspecs_named)
         self._write_dense = jax.jit(scatter_prefill_dense,
@@ -534,12 +605,27 @@ class LPUEngine:
     # -- prefill + admission -------------------------------------------
 
     def _refresh_tables(self) -> None:
+        """Mirror decode-ready sequences' block lists into the replicated
+        (slots, T) table the decode programs consume.  Slots that are
+        empty OR still prefilling stay all-zero: their don't-care window
+        writes land in the null block — a prefilling slot's REAL blocks
+        are known only to the host and the per-chunk program, so decode
+        can never clobber a partially-resident prompt.
+
+        A FRESH array is allocated every refresh, never an in-place
+        rewrite: ``jnp.asarray`` on CPU can alias an aligned numpy
+        buffer zero-copy, so mutating the old array would race with a
+        still-executing window that was dispatched against it (the
+        pipelined h2 dispatch refreshes tables while h1 is in flight) —
+        the transiently zeroed rows read as null-block garbage and
+        corrupt the stream."""
         if not self.paged:
             return
-        self.block_tables[:] = 0
+        tables = np.zeros((self.slots, self.table_len), np.int32)
         for slot, seq in enumerate(self.sched.active):
-            if seq is not None and seq.blocks:
-                self.block_tables[slot, :len(seq.blocks)] = seq.blocks
+            if seq is not None and seq.blocks and not seq.prefilling:
+                tables[slot, :len(seq.blocks)] = seq.blocks
+        self.block_tables = tables
 
     def _should_finish(self, seq: SeqSlot, tok: int) -> bool:
         req = seq.req
@@ -555,10 +641,20 @@ class LPUEngine:
         return req
 
     def _do_prefill(self, seq: SeqSlot) -> Optional[Request]:
-        """Run bucketed prefill for a just-admitted sequence; returns the
-        request if it finished immediately (eos / max_new_tokens == 1)."""
+        """Run MONOLITHIC bucketed prefill for a just-admitted sequence.
+
+        The whole prompt (pow2-padded) runs as one batch-1 program and
+        its cache is block-copied into the pool (or the slot's dense
+        region) afterwards.  While it runs, every in-flight decode
+        stream is frozen — ``stats.decode_stalls`` counts exactly those
+        launches (the tail-latency cliff ``prefill_chunk`` removes).
+        Returns the request if it finished immediately (eos /
+        max_new_tokens == 1).
+        """
         req = seq.req
         tokens = req.resume_tokens()
+        if self.sched.num_decoding() > 0:
+            self.stats.decode_stalls += 1
         bucket = (self.sched.bucket(len(tokens)) if self.bucketed
                   else len(tokens))
         buf = np.zeros((1, bucket), np.int32)
@@ -575,6 +671,14 @@ class LPUEngine:
                                            jnp.asarray(table))
         else:
             self.cache = self._write_dense(self.cache, pc, jnp.int32(slot))
+        return self._finish_prefill(seq, row)
+
+    def _finish_prefill(self, seq: SeqSlot, row) -> Optional[Request]:
+        """Shared tail of both prefill paths, once the prompt is fully
+        resident: restore the last sampled token (preemption resume) or
+        sample the first one from the final logits row, then apply the
+        finish rules.  Returns the request if it finished immediately."""
+        req = seq.req
         if seq.resumed:
             seq.last_token = req.out[-1]
             return None
@@ -586,6 +690,70 @@ class LPUEngine:
         if self._should_finish(seq, tok):
             return self._finish(seq)
         return None
+
+    def _run_prefill_chunk(self, seq: SeqSlot) -> Optional[Request]:
+        """Make the next ``prefill_chunk`` prompt tokens of ``seq``
+        resident (KV scattered incrementally into the pool through the
+        request's table); on the final chunk, hand off to
+        :meth:`_finish_prefill`.  The caller has already reserved the
+        chunk's blocks (:meth:`Scheduler.chunk_reserve`).  Returns the
+        request if it finished immediately."""
+        req = seq.req
+        tokens = req.resume_tokens()
+        C = self.prefill_chunk
+        start = seq.prefilled
+        n_valid = min(C, len(tokens) - start)
+        buf = np.zeros((1, C), np.int32)
+        buf[0, :n_valid] = tokens[start:start + n_valid]
+        table = np.zeros((self.table_len,), np.int32)
+        table[:len(seq.blocks)] = seq.blocks
+        row, self.cache = self._prefill_chunk_fn(
+            self.params, self.cache, jnp.asarray(buf), jnp.asarray(table),
+            jnp.int32(start), jnp.int32(n_valid))
+        seq.prefilled = start + n_valid
+        seq.pos = seq.prefilled
+        self._buckets_traced.add(("chunk", C))
+        self.stats.prefills += 1
+        self.stats.prefill_chunks += 1
+        if seq.prefilling:
+            return None              # more chunks next step
+        return self._finish_prefill(seq, row)
+
+    def _admit_and_chunk(self) -> List[Request]:
+        """Chunked-mode admission: admit while slots + first-chunk
+        blocks allow, then run ONE prefill chunk — the per-step prefill
+        budget — for one prefilling sequence.  The decode window
+        dispatched later in the same :meth:`_step` is what makes the
+        interleave: active streams keep producing a token per step
+        while a long prompt trickles in, instead of standing still for
+        its whole bucketed prefill.
+
+        The chunk goes to prefilling sequences ROUND-ROBIN (by
+        admission order, resuming after the last one served), not
+        FIFO-to-completion: a 40-token prompt ahead of a 3-token prompt
+        must not hold the short one's first token hostage for ten
+        steps — exactly the head-of-line blocking chunking exists to
+        remove."""
+        finished: List[Request] = []
+        while self.sched.admit_next(chunk=self.prefill_chunk) is not None:
+            pass
+        cands = self.sched.prefilling()
+        # rotate so the scan starts just after the last sequence served
+        # (each candidate probed at most once per step)
+        i = next((j for j, s in enumerate(cands)
+                  if s.admit_seq > self._chunk_rr), 0)
+        for seq in cands[i:] + cands[:i]:
+            got = self.sched.chunk_reserve(
+                seq, self.prefill_chunk,
+                allow_preempt=self.sched.num_decoding() == 0)
+            if got is None:
+                continue             # pool pressure: try the next seq
+            self._chunk_rr = seq.admit_seq
+            done = self._run_prefill_chunk(seq)
+            if done is not None:
+                finished.append(done)
+            break                    # ONE chunk per step
+        return finished
 
     # -- public API ----------------------------------------------------
 
@@ -611,11 +779,15 @@ class LPUEngine:
         return req.rid
 
     def step(self) -> List[Request]:
-        """One scheduler round: admit + prefill, then one decode round
-        for the whole slot batch — a fused window of up to
-        ``steps_per_sync`` device steps (pipelined one window ahead) in
-        the default fused mode, or a single host-sampled step with
-        ``sampling="host"``.  Returns requests finished this round."""
+        """One scheduler round: admit + prefill (monolithic, or ONE
+        chunk in ``prefill_chunk`` mode), then one decode round for the
+        whole slot batch — a fused window of up to ``steps_per_sync``
+        device steps (pipelined one window ahead) in the default fused
+        mode, or a single host-sampled step with ``sampling="host"``.
+        In chunked mode the prefill chunk and the decode window share
+        the step — that interleave is what keeps active streams
+        producing while a long prompt admits.  Returns requests
+        finished this round."""
         t0 = time.time()
         try:
             return self._step()
@@ -624,19 +796,22 @@ class LPUEngine:
 
     def _step(self) -> List[Request]:
         finished: List[Request] = []
-        while True:
-            seq = self.sched.admit_next()
-            if seq is None:
-                break
-            done = self._do_prefill(seq)
-            if done is not None:
-                finished.append(done)
+        if self.prefill_chunk:
+            finished += self._admit_and_chunk()
+        else:
+            while True:
+                seq = self.sched.admit_next()
+                if seq is None:
+                    break
+                done = self._do_prefill(seq)
+                if done is not None:
+                    finished.append(done)
         self.sched.ensure_decode_capacity()     # may preempt (recompute)
         self.stats.preemptions = self.sched.preemptions
         if self.sched.pool is not None:
             self.stats.peak_pool_blocks = max(self.stats.peak_pool_blocks,
                                               self.sched.pool.num_used)
-        if self.sched.num_active() == 0:
+        if self.sched.num_decoding() == 0:
             return finished
         if self.sampling == "fused":
             finished += self._fused_decode_round()
@@ -656,7 +831,7 @@ class LPUEngine:
         toks = np.zeros((self.slots, 1), np.int32)
         pos = np.zeros((self.slots,), np.int32)
         for slot, seq in enumerate(self.sched.active):
-            if seq is not None:
+            if seq is not None and not seq.prefilling:
                 toks[slot, 0] = seq.last_token
                 pos[slot] = seq.pos
         tables = (jnp.asarray(self.block_tables) if self.paged else None)
@@ -671,7 +846,7 @@ class LPUEngine:
         self.stats.steps += 1
         self.stats.slot_steps += self.slots
         for slot, seq in enumerate(self.sched.active):
-            if seq is None:
+            if seq is None or seq.prefilling:
                 continue
             req = seq.req
             self.stats.busy_slot_steps += 1
@@ -690,7 +865,15 @@ class LPUEngine:
 
     def _slot_state(self) -> Tuple[tuple, tuple]:
         """Host slot state -> the window program's carry + per-slot
-        sampling params (tiny O(slots) uploads)."""
+        sampling params (tiny O(slots) uploads).
+
+        A slot is marked ``alive`` only when it holds a DECODE-READY
+        sequence.  Empty slots and slots still chunk-prefilling stay
+        dead (zeros): the window freezes them — their (last, pos) never
+        advance and their KV writes target the null block (the table
+        row is zeroed by :meth:`_refresh_tables`), so a window can
+        safely run concurrently with a prompt that is only partially
+        resident."""
         B = self.slots
         last = np.zeros((B,), np.int32)
         pos = np.zeros((B,), np.int32)
@@ -701,7 +884,7 @@ class LPUEngine:
         top_ps = np.ones((B,), np.float32)
         max_new = np.zeros((B,), np.int32)
         for slot, seq in enumerate(self.sched.active):
-            if seq is None:
+            if seq is None or seq.prefilling:
                 continue
             sp = seq.req.params
             last[slot] = seq.last_token
@@ -717,17 +900,21 @@ class LPUEngine:
     def _admission_waiting(self) -> bool:
         """True when the baseline loop could admit next step: a queued
         request AND a free slot (pool pressure pending).  Multi-step
-        windows stand down then, so admission latency stays at the
-        single-step baseline's."""
+        windows shrink to a single step then, so admission latency
+        stays at the single-step baseline's.  Note this is the
+        *window-size* rule only — the full-prefill decode stall (every
+        stream frozen while a long prompt prefills monolithically) is
+        what ``prefill_chunk`` removes; see :meth:`_admit_and_chunk`."""
         return bool(self.sched.queue) and \
             any(s is None for s in self.sched.active)
 
     def _may_survive(self, steps: int) -> bool:
-        """Could any slot still be alive after ``steps`` more tokens?
-        (Budget/length check only — eos can still end a window early;
-        speculation past an eos is bounded waste, never wrong.)"""
+        """Could any decode-ready slot still be alive after ``steps``
+        more tokens?  (Budget/length check only — eos can still end a
+        window early; speculation past an eos is bounded waste, never
+        wrong.  Prefilling slots sit windows out entirely.)"""
         for seq in self.sched.active:
-            if seq is None:
+            if seq is None or seq.prefilling:
                 continue
             if (seq.req.max_new_tokens - len(seq.req.out)) > steps and \
                     (self.max_seq - 1 - seq.pos) > steps:
@@ -741,7 +928,8 @@ class LPUEngine:
         out = self._window(win)(self.params, self.cache, tables, *carry,
                                 self.rng, *samp)
         tok_mat, self.cache, last, pos, n_out, alive, self.rng = out
-        snapshot = [s is not None for s in self.sched.active]
+        snapshot = [s is not None and not s.prefilling
+                    for s in self.sched.active]
         return (win, tok_mat, snapshot), (last, pos, n_out, alive)
 
     def _reconcile(self, handle) -> List[Request]:
@@ -757,14 +945,14 @@ class LPUEngine:
         self.stats.bytes_to_host += toks.nbytes
         finished: List[Request] = []
         for s in range(win):
-            if self.sched.num_active() == 0:
+            if self.sched.num_decoding() == 0:
                 self.stats.overrun_tokens += \
                     (win - s) * sum(dispatch_active)
                 break
             self.stats.steps += 1
             self.stats.slot_steps += self.slots
             for slot, seq in enumerate(self.sched.active):
-                if seq is None:
+                if seq is None or seq.prefilling:
                     if dispatch_active[slot]:
                         self.stats.overrun_tokens += 1
                     continue

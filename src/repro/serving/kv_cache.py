@@ -162,6 +162,34 @@ def scatter_prefill_pages(cache: Params, prefill_cache: Params,
     return out
 
 
+def scatter_chunk_rows(pages: jax.Array, rows: jax.Array,
+                       block_table: jax.Array, positions: jax.Array,
+                       valid: jax.Array) -> jax.Array:
+    """Positionwise scatter of ONE prefill chunk into the block pool.
+
+    The monolithic prefill path materializes a whole batch=1 cache and
+    copies it block-aligned (:func:`scatter_prefill_pages`); a *chunk*
+    of a partially-prefilled prompt instead lands token by token — its
+    start offset is arbitrary (chunks need not align to block
+    boundaries), so each row resolves its own (physical block, offset)
+    through the request's table, exactly like the decode path's
+    one-token scatter.
+
+    pages:       (N, bs, G, dh) one layer of the shared pool
+    rows:        (C, G, dh) the chunk's freshly computed K (or V)
+    block_table: (T,) the request's physical block ids
+    positions:   (C,) absolute token positions of the chunk rows
+    valid:       (C,) bool; padded rows are routed to the null block 0
+                 (absorbed don't-care traffic, masked on read).
+    """
+    bs = pages.shape[1]
+    T = block_table.shape[0]
+    idx = jnp.clip(positions // bs, 0, T - 1)
+    blk = jnp.where(valid, block_table[idx], 0)
+    off = positions % bs
+    return pages.at[blk, off].set(rows.astype(pages.dtype))
+
+
 def scatter_prefill_dense(cache: Params, prefill_cache: Params,
                           slot: jax.Array) -> Params:
     """Copy a batch=1 prefill cache into one slot of the dense cache.

@@ -7,15 +7,22 @@ lets the same scheduler drive the single-device engine and the
 ring-parallel ``shard_map`` engine unchanged (the paper's host/LPU
 split: the driver sequences work, the accelerators never branch).
 
-Four policies live here:
+Five policies live here:
 
 * **Admission** — FIFO: a queued request is admitted when a slot is free
   AND (paged mode) the block pool can cover its prompt.  Prompt lengths
   are padded to power-of-two buckets (:func:`repro.serving.kv_cache.
   bucket_for`) so the prefill jit traces O(log2 max_seq) times total.
-* **Growth** — before every decode step each active sequence must own the
-  block its next token lands in; blocks are allocated lazily one at a
-  time as sequences cross block boundaries.
+* **Chunked admission** (``admit_next(chunk=C)``) — the engine's
+  ``--prefill-chunk`` interleave admits against the FIRST chunk's
+  blocks only; the prompt becomes resident C tokens per engine step
+  (:meth:`Scheduler.chunk_reserve` grows the block set per chunk,
+  never preempting while decode streams can still free blocks), and
+  the sequence joins decode windows only once fully prefilled
+  (``SeqSlot.prefilling``).
+* **Growth** — before every decode step each decode-ready sequence must
+  own the block its next token lands in; blocks are allocated lazily
+  one at a time as sequences cross block boundaries.
 * **Preemption** — when growth cannot be satisfied, the most recently
   admitted *other* sequence is evicted (recompute-style: its blocks are
   freed, it re-enters the queue front, and its tokens so far are
@@ -38,13 +45,29 @@ from repro.serving.kv_cache import BlockPool, blocks_for, bucket_for
 
 @dataclass
 class SeqSlot:
-    """An active request's per-slot serving state."""
+    """An active request's per-slot serving state.
+
+    ``pos`` always means *tokens resident in KV* — for a decode-ready
+    sequence that is prompt + generated-so-far; for a sequence admitted
+    under chunked prefill it starts at 0 and advances one chunk at a
+    time (``prefilled == pos`` until the prompt is fully resident).
+    """
     req: "object"                 # repro.serving.engine.Request
     pos: int                      # tokens resident in KV cache
     blocks: List[int] = field(default_factory=list)
     admit_seq: int = 0            # admission order (monotonic)
     resumed: bool = False         # re-admitted after preemption
     last_token: int = 0           # sampled but not yet fed to the model
+    prefilled: int = 0            # prompt tokens resident (chunked mode)
+    prefill_target: int = 0       # prompt tokens to make resident (0 =
+                                  # monolithic prefill, done at admit)
+
+    @property
+    def prefilling(self) -> bool:
+        """True while the prompt is only partially resident: the slot
+        owns blocks and advances a chunk per engine step, but takes no
+        part in decode windows (its table rows stay null-block)."""
+        return self.prefilled < self.prefill_target
 
 
 class Scheduler:
@@ -105,11 +128,23 @@ class Scheduler:
                     f"{self.pool.num_blocks - 1} allocatable blocks")
         self.queue.append(req)
 
-    def admit_next(self) -> Optional[SeqSlot]:
+    def admit_next(self, chunk: int = 0) -> Optional[SeqSlot]:
         """Admit the head of the queue if a slot and blocks are available.
 
-        Returns the newly filled SeqSlot (prefill is the engine's job) or
-        None when nothing can be admitted right now.
+        ``chunk == 0`` (monolithic prefill): the whole prompt's blocks
+        are reserved at admission and ``pos`` starts fully resident —
+        the engine runs one bucketed prefill immediately after.
+
+        ``chunk > 0`` (chunked prefill): only the FIRST chunk's blocks
+        are reserved; the slot starts with ``pos == prefilled == 0`` and
+        ``prefill_target == len(resume_tokens)``, and the engine makes
+        the prompt resident one chunk per step
+        (:meth:`chunk_reserve` grows the block set chunk by chunk), so
+        admission never has to find room for a whole long prompt up
+        front — the per-chunk analog of decode's lazy block growth.
+
+        Returns the newly filled SeqSlot (prefill is the engine's job)
+        or None when nothing can be admitted right now.
         """
         if not self.queue:
             return None
@@ -119,9 +154,11 @@ class Scheduler:
             return None
         req = self.queue[0]
         n_tok = len(req.resume_tokens())
+        reserve = min(n_tok, chunk) if chunk else n_tok
         blocks: List[int] = []
         if self.pool is not None:
-            got = self.pool.alloc(blocks_for(n_tok, self.pool.block_size))
+            got = self.pool.alloc(blocks_for(reserve,
+                                             self.pool.block_size))
             if got is None:
                 if self.num_active() == 0 and \
                         self.pool.num_used == 0:
@@ -130,15 +167,16 @@ class Scheduler:
                     # pool after preemption) — fail loudly, don't livelock
                     raise RuntimeError(
                         f"request {getattr(req, 'rid', '?')} needs "
-                        f"{blocks_for(n_tok, self.pool.block_size)} blocks "
-                        f"but the pool holds only "
+                        f"{blocks_for(reserve, self.pool.block_size)} "
+                        f"blocks but the pool holds only "
                         f"{self.pool.num_blocks - 1}; increase num_blocks")
                 return None          # pool pressure: wait for finishes
             blocks = got
         self.queue.popleft()
-        seq = SeqSlot(req=req, pos=n_tok, blocks=blocks,
+        seq = SeqSlot(req=req, pos=0 if chunk else n_tok, blocks=blocks,
                       admit_seq=self._admit_counter,
-                      resumed=bool(req.out))
+                      resumed=bool(req.out),
+                      prefill_target=n_tok if chunk else 0)
         self._admit_counter += 1
         self.active[free_slot] = seq
         return seq
@@ -146,19 +184,82 @@ class Scheduler:
     def slot_of(self, seq: SeqSlot) -> int:
         return self.active.index(seq)
 
+    def prefilling(self) -> List[SeqSlot]:
+        """Active sequences whose prompt is still partially resident, in
+        admission order.  The engine runs ONE chunk per step for one of
+        these, ROUND-ROBIN over the admission order (it rotates from
+        the last sequence served), so neither a long prompt at the head
+        nor later arrivals can starve the others — see
+        ``LPUEngine._admit_and_chunk``."""
+        return sorted((s for s in self.active
+                       if s is not None and s.prefilling),
+                      key=lambda s: s.admit_seq)
+
+    def num_decoding(self) -> int:
+        """Active sequences that take part in decode windows (fully
+        prefilled); the complement of :meth:`prefilling`."""
+        return sum(1 for s in self.active
+                   if s is not None and not s.prefilling)
+
     # -- growth / preemption ----------------------------------------------
 
+    def chunk_reserve(self, seq: SeqSlot, chunk: int,
+                      allow_preempt: bool = False) -> List[SeqSlot] | None:
+        """Reserve the blocks the next prefill chunk of ``seq`` lands in.
+
+        The chunked analog of :meth:`ensure_decode_capacity`'s lazy
+        growth: before each chunk the sequence must own every block up
+        to ``min(prefilled + chunk, prefill_target)`` tokens.  By
+        default this NEVER preempts — on shortfall nothing is allocated
+        and the caller simply retries next step (in-flight decode
+        streams keep freeing blocks as they finish); with
+        ``allow_preempt=True`` (the engine sets it only when no decode
+        stream is active, i.e. nothing else will ever free blocks) the
+        usual newest-victim recompute preemption applies.
+
+        Returns the list of preempted SeqSlots on success (usually
+        empty), or None when the chunk cannot be covered right now.
+        """
+        if self.pool is None:
+            return []
+        target = min(seq.prefilled + chunk, seq.prefill_target)
+        preempted: List[SeqSlot] = []
+        while True:
+            short = blocks_for(target, self.pool.block_size) \
+                - len(seq.blocks)
+            if short <= 0:
+                return preempted
+            got = self.pool.alloc(short)
+            if got is not None:
+                seq.blocks.extend(got)
+                return preempted
+            if not allow_preempt:
+                return None
+            victim = self._pick_victim(exclude=seq)
+            if victim is None:
+                raise RuntimeError(
+                    "KV block pool exhausted by a single prefilling "
+                    "sequence; increase num_blocks or lower max_seq")
+            self._preempt(victim)
+            preempted.append(victim)
+
     def ensure_decode_capacity(self) -> List[SeqSlot]:
-        """Guarantee every active sequence owns the block its next token
-        writes into, preempting the newest other sequences if the pool is
-        exhausted.  Returns the list of preempted SeqSlots (engine resets
-        their host decode state)."""
+        """Guarantee every decode-ready sequence owns the block its next
+        token writes into, preempting the newest other sequences if the
+        pool is exhausted.  Returns the list of preempted SeqSlots
+        (engine resets their host decode state).
+
+        Sequences still prefilling are skipped: their block growth is
+        chunk-driven (:meth:`chunk_reserve`) and they write no decode
+        token this round — but they CAN be picked as preemption victims
+        (newest-first), in which case the whole partial prefill is
+        recomputed on re-admission."""
         if self.pool is None:
             return []
         preempted: List[SeqSlot] = []
         for i in range(self.slots):
             seq = self.active[i]
-            if seq is None:
+            if seq is None or seq.prefilling:
                 continue
             need_blocks = blocks_for(seq.pos + 1, self.pool.block_size)
             while len(seq.blocks) < need_blocks:
@@ -186,12 +287,16 @@ class Scheduler:
         lookahead must not evict resident work, so on shortfall nothing
         is allocated and the caller falls back to single-step dispatch
         (where the usual grow-or-preempt policy applies).
+
+        Prefilling sequences are skipped: they sit out decode windows
+        (frozen null-block rows), so reserving decode lookahead for
+        them would only race :meth:`chunk_reserve` for the same blocks.
         """
         if self.pool is None:
             return True
         needs = []
         for seq in self.active:
-            if seq is None:
+            if seq is None or seq.prefilling:
                 continue
             target = min(seq.pos + steps, self.max_seq)
             short = blocks_for(target, self.pool.block_size) \
