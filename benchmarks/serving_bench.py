@@ -32,7 +32,14 @@ statistics the paged refactor targets:
   (``decode_stalls`` counts those launches) while the
   ``paged-stream-interleaved`` row (``--prefill-chunk`` tokens/step)
   runs one prefill chunk AND one decode window per step —
-  ``decode_stalls`` must be zero and the token streams bit-identical.
+  ``decode_stalls`` must be zero and the token streams bit-identical,
+* **prefix-cache accounting (off vs on)** — a shared-system-prompt
+  workload (every request opens with the same prefix) run twice on the
+  streamed engine: the ``paged-stream-prefix-on`` row maps the cached
+  prefix blocks into each admission (refcounted, copy-on-write) and
+  prefills only the tail — ``prefill_tokens_saved``,
+  ``prefix_hit_blocks`` and the mean TTFT record the win, the OFF row
+  must save nothing, and the token streams must be bit-identical.
 
     PYTHONPATH=src python benchmarks/serving_bench.py --requests 16
 
@@ -78,15 +85,28 @@ from repro.serving.engine import LPUEngine, MultiRingEngine  # noqa: E402
 def run_engine(model, params, prompts, *, slots, max_seq, max_new,
                paged, block_size=0, num_blocks=0, paged_kernel="auto",
                sampling="fused", steps_per_sync=1, block_s=0,
-               prefill_chunk=0):
+               prefill_chunk=0, prefix_cache=False):
+    """Run one engine config over the trace.  Returns
+    ``(engine, outputs, mean TTFT ms)`` — time-to-first-token is wall
+    time from batch submission to each request's first streamed token
+    (its prefill completing), the latency prefix caching attacks."""
     eng = LPUEngine(model, params, slots=slots, max_seq=max_seq,
                     paged=paged, block_size=block_size,
                     num_blocks=num_blocks, paged_kernel=paged_kernel,
                     sampling=sampling, steps_per_sync=steps_per_sync,
-                    block_s=block_s, prefill_chunk=prefill_chunk)
-    outs = eng.generate(prompts, max_new_tokens=max_new)
+                    block_s=block_s, prefill_chunk=prefill_chunk,
+                    prefix_cache=prefix_cache)
+    t_first = {}
+    t0 = time.time()
+
+    def cb(rid, tok):
+        t_first.setdefault(rid, time.time())
+
+    outs = eng.generate(prompts, max_new_tokens=max_new, stream_cb=cb)
     assert all(len(o) == max_new for o in outs)
-    return eng, outs
+    ttft_ms = 1e3 * sum(t - t0 for t in t_first.values()) \
+        / max(len(t_first), 1)
+    return eng, outs, ttft_ms
 
 
 MLIR_DTYPE = {"float32": "f32", "bfloat16": "bf16", "float16": "f16"}
@@ -184,7 +204,10 @@ REQUIRED_ROW_KEYS = {"mode", "tokens_per_s", "ms_per_token", "occupancy",
                      "prefill_syncs", "syncs_per_token",
                      "bytes_to_host_per_token", "overrun_tokens",
                      "block_s", "planned_block_s",
-                     "prefill_chunk", "prefill_chunks", "decode_stalls"}
+                     "prefill_chunk", "prefill_chunks", "decode_stalls",
+                     "prefix_cache", "prefix_hit_rate",
+                     "prefix_hit_blocks", "prefill_tokens_saved",
+                     "evicted_blocks", "cow_blocks", "ttft_ms_mean"}
 
 
 def validate_bench(out: dict) -> None:
@@ -198,7 +221,8 @@ def validate_bench(out: dict) -> None:
     modes = {r["mode"] for r in out["rows"]}
     for want in ("dense", "paged-gather", "paged-stream",
                  "paged-stream-synced", "paged-stream-standdown",
-                 "paged-stream-interleaved"):
+                 "paged-stream-interleaved", "paged-stream-prefix-off",
+                 "paged-stream-prefix-on"):
         if want not in modes:
             raise ValueError(f"BENCH schema: missing row {want!r}")
     if not any(m.startswith("paged-stream-fused-s") for m in modes):
@@ -244,6 +268,11 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="chunk size of the interleaved-prefill row "
                          "(paged-stream-interleaved)")
+    ap.add_argument("--prefix-cache", default="off",
+                    choices=("on", "off"),
+                    help="enable prefix caching on the MAIN mixed-trace "
+                         "paged rows (the shared-system-prompt contrast "
+                         "pair always runs both off and on)")
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: validate the result schema and "
@@ -281,14 +310,15 @@ def main():
                for n in lengths]
     distinct_lengths = len(set(int(n) for n in lengths))
 
-    dense, dense_outs = run_engine(model, params, prompts,
-                                   slots=args.slots, max_seq=args.max_seq,
-                                   max_new=args.max_new, paged=False,
-                                   block_s=args.block_s)
+    prefix_on = args.prefix_cache == "on"
+    dense, dense_outs, dense_ttft = run_engine(
+        model, params, prompts, slots=args.slots, max_seq=args.max_seq,
+        max_new=args.max_new, paged=False, block_s=args.block_s)
     # every row's token streams are asserted against a reference trace
     # run — dense for the shared-trace rows, the monolithic standdown
-    # run for the interleave pair (which adds a long prompt)
-    engines = [("dense", dense, dense_outs, dense_outs)]
+    # run for the interleave pair (which adds a long prompt), the
+    # prefix-off run for the shared-system-prompt pair
+    engines = [("dense", dense, dense_outs, dense_outs, dense_ttft)]
     # paged pool sized at half the dense capacity: enough for the trace's
     # resident tokens, impossible for a dense allocator.  Same pool, two
     # dataflows: the gather oracle (contiguous per-request copy each
@@ -303,26 +333,30 @@ def main():
     # a --block-s override only reaches the gather/dense flash chunk
     stream_bs = args.block_s if args.block_s == args.block_size else 0
     for kern, bs in (("gather", args.block_s), ("stream", stream_bs)):
-        eng, outs = run_engine(model, params, prompts,
-                               paged_kernel=kern, block_s=bs, **paged_kw)
-        engines.append((f"paged-{kern}", eng, outs, dense_outs))
+        eng, outs, ttft = run_engine(model, params, prompts,
+                                     paged_kernel=kern, block_s=bs,
+                                     prefix_cache=prefix_on, **paged_kw)
+        engines.append((f"paged-{kern}", eng, outs, dense_outs, ttft))
     # the synced-vs-fused contrast (paper C1 on-chip sampling): same
     # streamed pool, three host-loop disciplines — full logits row to
     # host per token, fused 1-step (token ids only), fused multi-step
     # (steps_per_sync tokens per readback)
-    eng, outs = run_engine(model, params, prompts, paged_kernel="stream",
-                           sampling="host", block_s=stream_bs, **paged_kw)
-    engines.append(("paged-stream-synced", eng, outs, dense_outs))
+    eng, outs, ttft = run_engine(model, params, prompts,
+                                 paged_kernel="stream", sampling="host",
+                                 block_s=stream_bs, **paged_kw)
+    engines.append(("paged-stream-synced", eng, outs, dense_outs, ttft))
     # multi-step windows reserve their whole lookahead up front and
     # NEVER preempt for it, so at the half-capacity pool above the
     # engine would (correctly) degrade to single-step under pressure —
     # the S-step row gets the dense-equivalent pool to show the
     # headroom-funded win (pool fields record the difference)
     msd_kw = dict(paged_kw, num_blocks=args.slots * table_len + 1)
-    eng, outs = run_engine(model, params, prompts, paged_kernel="stream",
-                           sampling="fused", steps_per_sync=S,
-                           block_s=stream_bs, **msd_kw)
-    engines.append((f"paged-stream-fused-s{S}", eng, outs, dense_outs))
+    eng, outs, ttft = run_engine(model, params, prompts,
+                                 paged_kernel="stream", sampling="fused",
+                                 steps_per_sync=S, block_s=stream_bs,
+                                 **msd_kw)
+    engines.append((f"paged-stream-fused-s{S}", eng, outs, dense_outs,
+                    ttft))
     # the interleave contrast (streamlined-dataflow latency claim): the
     # SAME streamed engine, monolithic vs chunked admission, on the
     # trace plus ONE LONG prompt that lands while short streams are
@@ -336,18 +370,47 @@ def main():
     long_len = args.max_seq - args.max_new - 2
     il_prompts = prompts + [list(rng.randint(1, cfg.vocab_size,
                                              size=long_len))]
-    sd_eng, sd_outs = run_engine(model, params, il_prompts,
-                                 paged_kernel="stream",
-                                 block_s=stream_bs, **msd_kw)
-    engines.append(("paged-stream-standdown", sd_eng, sd_outs, sd_outs))
-    eng, outs = run_engine(model, params, il_prompts,
-                           paged_kernel="stream", block_s=stream_bs,
-                           prefill_chunk=args.prefill_chunk, **msd_kw)
-    engines.append(("paged-stream-interleaved", eng, outs, sd_outs))
+    sd_eng, sd_outs, sd_ttft = run_engine(model, params, il_prompts,
+                                          paged_kernel="stream",
+                                          block_s=stream_bs, **msd_kw)
+    engines.append(("paged-stream-standdown", sd_eng, sd_outs, sd_outs,
+                    sd_ttft))
+    eng, outs, ttft = run_engine(model, params, il_prompts,
+                                 paged_kernel="stream", block_s=stream_bs,
+                                 prefill_chunk=args.prefill_chunk,
+                                 **msd_kw)
+    engines.append(("paged-stream-interleaved", eng, outs, sd_outs, ttft))
+    # the prefix-caching contrast (this PR's latency claim): a
+    # shared-system-prompt workload — every request opens with the SAME
+    # sys_len-token prefix (the datacenter shape prefix caching exists
+    # for) plus a unique tail.  Same streamed engine, same
+    # dense-equivalent pool, prefix cache off vs on: the ON run
+    # prefills the shared prefix ONCE, every later admission maps the
+    # cached blocks (refcounted, copy-on-write) into its table and
+    # prefills only the tail — prefill_tokens_saved / prefix_hit_blocks
+    # count the win, TTFT shows it, and the token streams must stay
+    # bit-identical.
+    sys_len = 3 * args.block_size
+    sp_rng = np.random.RandomState(11)
+    sys_prompt = list(sp_rng.randint(1, cfg.vocab_size, size=sys_len))
+    tail_max = max(args.max_seq - args.max_new - sys_len - 1, 2)
+    sp_prompts = [sys_prompt + list(sp_rng.randint(
+        1, cfg.vocab_size, size=int(sp_rng.randint(1, min(tail_max, 8)))))
+        for _ in range(args.requests)]
+    px_off, px_off_outs, px_off_ttft = run_engine(
+        model, params, sp_prompts, paged_kernel="stream",
+        block_s=stream_bs, **msd_kw)
+    engines.append(("paged-stream-prefix-off", px_off, px_off_outs,
+                    px_off_outs, px_off_ttft))
+    px_on, px_on_outs, px_on_ttft = run_engine(
+        model, params, sp_prompts, paged_kernel="stream",
+        block_s=stream_bs, prefix_cache=True, **msd_kw)
+    engines.append(("paged-stream-prefix-on", px_on, px_on_outs,
+                    px_off_outs, px_on_ttft))
 
     bucket_bound = int(math.log2(args.max_seq)) + 1
     rows = []
-    for name, eng, outs, ref_outs in engines:
+    for name, eng, outs, ref_outs, ttft in engines:
         st = eng.stats
         rows.append({
             "mode": name,
@@ -380,6 +443,13 @@ def main():
             "prefill_chunk": eng.prefill_chunk,
             "prefill_chunks": st.prefill_chunks,
             "decode_stalls": st.decode_stalls,
+            "prefix_cache": eng.prefix_cache,
+            "prefix_hit_rate": round(st.prefix_hit_rate, 3),
+            "prefix_hit_blocks": st.prefix_hit_blocks,
+            "prefill_tokens_saved": st.prefill_tokens_saved,
+            "evicted_blocks": st.evicted_blocks,
+            "cow_blocks": st.cow_blocks,
+            "ttft_ms_mean": round(ttft, 2),
         })
     scaling_rows, ring_stats = [], []
     if args.tp > 1:
@@ -422,7 +492,12 @@ def main():
                   f"(planned {r['planned_block_s']})]")
             print(f"  {'':>22}  prefill_chunk {r['prefill_chunk']}  "
                   f"chunks {r['prefill_chunks']}  "
-                  f"decode_stalls {r['decode_stalls']}")
+                  f"decode_stalls {r['decode_stalls']}  "
+                  f"prefix[{'on' if r['prefix_cache'] else 'off'}] "
+                  f"hit_rate {r['prefix_hit_rate']:.2f} "
+                  f"saved {r['prefill_tokens_saved']} "
+                  f"cow {r['cow_blocks']} evict {r['evicted_blocks']}  "
+                  f"ttft {r['ttft_ms_mean']:.1f} ms")
         print(f"  bucketed prefill traces <= log2(max_seq)+1 = "
               f"{bucket_bound} (vs {distinct_lengths} distinct lengths); "
               f"outputs identical: {out['same_output']}")
@@ -437,7 +512,10 @@ def main():
                   f"{r['tokens']} tokens  {r['tokens_per_s']:8.1f} tok/s  "
                   f"occ {r['occupancy']:.2f}  "
                   f"kv/rank {r['kv_bytes_per_rank']/1024:.0f} KiB")
-    assert rows[1]["prefill_traces"] <= bucket_bound, \
+    # with prefix caching on the main rows, cache-hit tails run through
+    # the chunk program's pow2 buckets — a second O(log2) trace family
+    trace_bound = bucket_bound * (2 if prefix_on else 1)
+    assert rows[1]["prefill_traces"] <= trace_bound, \
         "bucketed prefill exceeded the log2(max_seq) trace bound"
     assert out["same_output"], "paged output diverged from dense"
     by_mode = {r["mode"]: r for r in rows}
@@ -500,6 +578,22 @@ def main():
             (sd["decode_stalls"],
              "standdown baseline should stall decode at least once "
              "(long prompt admitted mid-decode)")
+    # prefix-cache gates: on the shared-system-prompt workload the ON
+    # run must map cached blocks and skip their prefill tokens; the OFF
+    # run must save nothing; the token streams must be bit-identical
+    # (same_output_as_dense compares the pair — ref is the OFF run).
+    px_off_r = by_mode["paged-stream-prefix-off"]
+    px_on_r = by_mode["paged-stream-prefix-on"]
+    assert px_on_r["same_output_as_dense"], \
+        "prefix-cache hit streams diverged from cold-start streams"
+    assert px_on_r["prefill_tokens_saved"] > 0, \
+        (px_on_r["prefill_tokens_saved"],
+         "shared-system-prompt workload must save prefill tokens")
+    assert px_on_r["prefix_hit_blocks"] > 0, \
+        "shared-system-prompt workload must map cached blocks"
+    assert px_off_r["prefill_tokens_saved"] == 0 \
+        and px_off_r["prefix_hit_blocks"] == 0, \
+        "prefix-cache off must save nothing"
     if args.smoke:
         validate_bench(out)
         Path(args.out).write_text(json.dumps(out, indent=2),

@@ -28,7 +28,10 @@ decode steps per host readback via one lax.scan window), ``--block-s``
 (override the planned KV stream tile / flash chunk for hardware tuning),
 ``--prefill-chunk C`` (chunked prefill: prompts become resident C tokens
 per step, interleaved with decode windows, so a long prompt never stalls
-in-flight streams — 0 = today's monolithic bucketed prefill).
+in-flight streams — 0 = today's monolithic bucketed prefill),
+``--prefix-cache {on,off}`` (prefix caching: a shared system prompt's
+blocks are prefilled once and mapped — refcounted, copy-on-write — into
+every later request's table; only the un-cached tail prefills).
 """
 from __future__ import annotations
 
@@ -100,6 +103,12 @@ def main():
                          "tokens per step, interleaved with decode "
                          "windows (paged only; 0 = monolithic bucketed "
                          "prefill)")
+    ap.add_argument("--prefix-cache", default="off",
+                    choices=("on", "off"),
+                    help="prefix caching: admissions whose prompt hits "
+                         "a cached block-aligned prefix map the shared "
+                         "blocks (refcounted, copy-on-write) into their "
+                         "table and prefill only the tail (paged only)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -128,7 +137,8 @@ def main():
                      sampling=args.sampling,
                      steps_per_sync=args.steps_per_sync,
                      block_s=args.block_s,
-                     prefill_chunk=args.prefill_chunk)
+                     prefill_chunk=args.prefill_chunk,
+                     prefix_cache=args.prefix_cache == "on")
     if rings > 1:
         engine = MultiRingEngine(model, params, mesh, ring_size=tp,
                                  **engine_kw)
@@ -178,6 +188,12 @@ def main():
         print(f"[serve] prefill_chunk={first.prefill_chunk}: "
               f"{st.prefill_chunks} chunks, "
               f"decode_stalls={st.decode_stalls}")
+        print(f"[serve] prefix_cache={args.prefix_cache}: "
+              f"hit_rate={st.prefix_hit_rate:.2f} "
+              f"({st.prefix_hits}/{st.prefix_lookups}), "
+              f"hit_blocks={st.prefix_hit_blocks}, "
+              f"prefill_tokens_saved={st.prefill_tokens_saved}, "
+              f"cow={st.cow_blocks}, evicted={st.evicted_blocks}")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o[:12]}")
 

@@ -93,7 +93,8 @@ from repro.core.dist import make_axis_env
 from repro.core.rings import reconfigure, submeshes
 from repro.kernels.decode_attention.ops import (plan_block_s,
                                                 resolve_paged_kernel)
-from repro.serving.kv_cache import (LANE, BlockPool, cache_bytes,
+from repro.serving.kv_cache import (LANE, BlockPool, PrefixCache,
+                                    cache_bytes, copy_pool_block,
                                     per_rank_block_bytes,
                                     pool_blocks_for_budget,
                                     scatter_prefill_dense,
@@ -149,6 +150,17 @@ class EngineStats:
                                   # bucketed prefill (chunked mode: 0 —
                                   # a decode window dispatches in the
                                   # same step as each chunk)
+    prefix_lookups: int = 0       # admissions that consulted the prefix
+                                  # index (prefix_cache=True only)
+    prefix_hits: int = 0          # ...that admitted with shared blocks
+    prefix_hit_blocks: int = 0    # pool blocks mapped from the index
+                                  # instead of freshly prefilled
+    prefill_tokens_saved: int = 0 # prompt tokens NOT re-prefilled thanks
+                                  # to prefix hits (the TTFT win)
+    evicted_blocks: int = 0       # cached refcount-0 blocks recycled by
+                                  # the pool's LRU under pressure
+    cow_blocks: int = 0           # copy-on-write splits: a shared block
+                                  # copied before a divergent KV write
 
     @property
     def tokens_per_s(self) -> float:
@@ -167,6 +179,12 @@ class EngineStats:
     @property
     def syncs_per_token(self) -> float:
         return self.host_syncs / max(self.tokens, 1)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefix-index consultations that mapped at least
+        one shared block into the admitted table."""
+        return self.prefix_hits / max(self.prefix_lookups, 1)
 
 
 class LPUEngine:
@@ -188,7 +206,8 @@ class LPUEngine:
                  mesh=None, kv_budget_bytes: int = 0,
                  paged_kernel: str = "auto", sampling: str = "fused",
                  steps_per_sync: int = 1, pipeline: bool = True,
-                 block_s: int = 0, prefill_chunk: int = 0):
+                 block_s: int = 0, prefill_chunk: int = 0,
+                 prefix_cache: bool = False):
         self.model = model
         self.cfg = model.cfg
         self.plan = model.plan
@@ -300,7 +319,21 @@ class LPUEngine:
                 "stacks); dense / recurrent-state caches prefill "
                 "monolithically")
         self.prefill_chunk = int(prefill_chunk)
-        self.sched = Scheduler(slots, max_seq, pool, min_bucket)
+        # prefix caching (--prefix-cache): a block-aligned hash index
+        # over prompt prefixes lets a new request map already-resident
+        # blocks (refcounted) into its table and prefill only the tail;
+        # shared blocks split copy-on-write at the first divergent KV
+        # write, and refcount-0 cached blocks are recycled LRU-first.
+        # Needs the paged pool: sharing is per-block by construction.
+        if prefix_cache and not self.paged:
+            raise ValueError(
+                "prefix_cache needs the paged KV pool (attention-only "
+                "stacks); the dense per-slot cache cannot share blocks")
+        self.prefix_cache = bool(prefix_cache)
+        self.prefix = PrefixCache(pool) if (self.paged and prefix_cache) \
+            else None
+        self.sched = Scheduler(slots, max_seq, pool, min_bucket,
+                               prefix=self.prefix)
         self.stats = EngineStats()
         self._results: Dict[int, List[int]] = {}
         self._rid = 0
@@ -314,6 +347,7 @@ class LPUEngine:
             self._prefill_chunk_fn = jax.jit(self._chunk_fn)
             self._write_pages = jax.jit(scatter_prefill_pages)
             self._write_dense = jax.jit(scatter_prefill_dense)
+            self._copy_block = jax.jit(copy_pool_block)
         else:
             self._build_mesh_fns()
 
@@ -519,6 +553,8 @@ class LPUEngine:
                                     out_shardings=cspecs_named)
         self._write_dense = jax.jit(scatter_prefill_dense,
                                     out_shardings=cspecs_named)
+        self._copy_block = jax.jit(copy_pool_block,
+                                   out_shardings=cspecs_named)
 
     def _build_mesh_window(self, S: int) -> Callable:
         """shard_map-wrapped fused window over the model ring.
@@ -655,6 +691,8 @@ class LPUEngine:
         tokens = req.resume_tokens()
         if self.sched.num_decoding() > 0:
             self.stats.decode_stalls += 1
+        if seq.cached:
+            return self._prefill_tail(seq, tokens)
         bucket = (self.sched.bucket(len(tokens)) if self.bucketed
                   else len(tokens))
         buf = np.zeros((1, bucket), np.int32)
@@ -673,12 +711,89 @@ class LPUEngine:
             self.cache = self._write_dense(self.cache, pc, jnp.int32(slot))
         return self._finish_prefill(seq, row)
 
+    def _prefill_tail(self, seq: SeqSlot, tokens: List[int]
+                      ) -> Optional[Request]:
+        """Prefill ONLY the un-cached tail of a prefix-cache hit.
+
+        The first ``seq.cached`` tokens' KV is already resident in the
+        shared blocks mapped at admission; the tail runs through the
+        chunk-prefill program (its queries attend the resident history
+        through the paged dataflow, its KV scatters through the table),
+        pow2-bucketed so tail lengths share O(log2 max_seq) traces with
+        the chunked-prefill path.  Shared blocks the tail writes into
+        (a hit capped mid-block) are split copy-on-write first.
+        """
+        n = len(tokens)
+        start = seq.cached
+        C = self.sched.bucket(n - start)
+        self._ensure_writable(seq, start, n)
+        buf = np.zeros((1, C), np.int32)
+        buf[0, :n - start] = tokens[start:n]
+        table = np.zeros((self.table_len,), np.int32)
+        table[:len(seq.blocks)] = seq.blocks
+        row, self.cache = self._prefill_chunk_fn(
+            self.params, self.cache, jnp.asarray(buf), jnp.asarray(table),
+            jnp.int32(start), jnp.int32(n - start))
+        self._buckets_traced.add(("chunk", C))
+        self.stats.prefills += 1
+        return self._finish_prefill(seq, row)
+
+    def _ensure_writable(self, seq: SeqSlot, lo: int, hi: int,
+                         allow_preempt: bool = True) -> bool:
+        """Copy-on-write guard: before KV for positions ``[lo, hi)`` of
+        ``seq`` is scattered, any block in that span referenced by MORE
+        than one table is copied device-side into a fresh block, the
+        fresh block swapped into ``seq``'s table, and the shared
+        original released — so the write can never reach another
+        request's (or the index's still-shared) resident KV.
+
+        Returns False (nothing copied beyond what already succeeded)
+        when a fresh block cannot be had without preemption and
+        ``allow_preempt`` is False — the retry-capable chunk path waits
+        for the next step.  Sole-owner blocks are written in place even
+        when index-registered: the write carries the SAME token's KV
+        (hits are capped at ``n - 1``, so the only in-span registered
+        positions are re-computations of the hashed tokens), which
+        keeps every index entry's content claim intact.
+        """
+        if self.sched.pool is None or hi <= lo:
+            return True
+        bs = self.block_size
+        for li in range(lo // bs, (hi - 1) // bs + 1):
+            if li >= len(seq.blocks):
+                break
+            old = seq.blocks[li]
+            if self.sched.pool.ref[old] <= 1:
+                continue
+            new, _ = self.sched.cow_alloc(seq, allow_preempt)
+            if new is None:
+                return False
+            self.cache = self._copy_block(self.cache, jnp.int32(old),
+                                          jnp.int32(new))
+            seq.blocks[li] = new
+            self.sched.pool.free([old])
+            self.stats.cow_blocks += 1
+        return True
+
+    def _cow_pending(self, seq: SeqSlot, lo: int, hi: int) -> bool:
+        """True while any block in the span is still multiply-referenced
+        (i.e. :meth:`_ensure_writable` has not run / could not finish)."""
+        pool = self.sched.pool
+        if pool is None or hi <= lo:
+            return False
+        bs = self.block_size
+        top = min((hi - 1) // bs + 1, len(seq.blocks))
+        return any(pool.ref[seq.blocks[li]] > 1
+                   for li in range(lo // bs, top))
+
     def _finish_prefill(self, seq: SeqSlot, row) -> Optional[Request]:
         """Shared tail of both prefill paths, once the prompt is fully
         resident: restore the last sampled token (preemption resume) or
         sample the first one from the final logits row, then apply the
         finish rules.  Returns the request if it finished immediately."""
         req = seq.req
+        if self.prefix is not None:
+            self.prefix.register(req.resume_tokens(), seq.blocks)
         if seq.resumed:
             seq.last_token = req.out[-1]
             return None
@@ -704,6 +819,8 @@ class LPUEngine:
         start = seq.prefilled
         n_valid = min(C, len(tokens) - start)
         buf = np.zeros((1, C), np.int32)
+        # table is built AFTER the CoW guard: a split swaps block ids
+        assert not self._cow_pending(seq, start, start + n_valid)
         buf[0, :n_valid] = tokens[start:start + n_valid]
         table = np.zeros((self.table_len,), np.int32)
         table[:len(seq.blocks)] = seq.blocks
@@ -743,11 +860,17 @@ class LPUEngine:
         i = next((j for j, s in enumerate(cands)
                   if s.admit_seq > self._chunk_rr), 0)
         for seq in cands[i:] + cands[:i]:
+            allow_preempt = self.sched.num_decoding() == 0
             got = self.sched.chunk_reserve(
                 seq, self.prefill_chunk,
-                allow_preempt=self.sched.num_decoding() == 0)
+                allow_preempt=allow_preempt)
             if got is None:
                 continue             # pool pressure: try the next seq
+            nxt = min(seq.prefilled + self.prefill_chunk,
+                      seq.prefill_target)
+            if not self._ensure_writable(seq, seq.prefilled, nxt,
+                                         allow_preempt=allow_preempt):
+                continue             # no CoW block free: try the next seq
             self._chunk_rr = seq.admit_seq
             done = self._run_prefill_chunk(seq)
             if done is not None:
@@ -811,6 +934,12 @@ class LPUEngine:
         if self.sched.pool is not None:
             self.stats.peak_pool_blocks = max(self.stats.peak_pool_blocks,
                                               self.sched.pool.num_used)
+            self.stats.evicted_blocks = self.sched.pool.evicted_blocks
+        if self.prefix is not None:
+            self.stats.prefix_lookups = self.prefix.lookups
+            self.stats.prefix_hits = self.prefix.hits
+            self.stats.prefix_hit_blocks = self.prefix.hit_blocks
+            self.stats.prefill_tokens_saved = self.prefix.tokens_saved
         if self.sched.num_decoding() == 0:
             return finished
         if self.sampling == "fused":

@@ -20,7 +20,9 @@ the shared pool / the dense slot cache; the engine jits them per bucket.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, Optional
+import zlib
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,11 +87,21 @@ def pool_blocks_for_budget(budget_bytes: int, block_bytes: int) -> int:
 
 
 class BlockPool:
-    """Free-list allocator over the shared block pool.
+    """Refcounting allocator over the shared block pool.
 
     Block 0 is reserved (null block) and never handed out.  ``alloc``
     returns None when the request cannot be satisfied — the scheduler
     turns that into queueing or preemption, never a partial grant.
+
+    Blocks carry a **refcount** so a prefix-cache hit can map the same
+    physical block into several block tables (:meth:`share`); ``free``
+    decrements and only returns the block to circulation at zero.  A
+    block *registered* in the prefix index (:meth:`mark_cached`) is not
+    recycled eagerly at refcount zero — it parks in an LRU and its KV
+    stays valid for future hits; ``alloc`` drains the plain free list
+    first and only then evicts LRU-oldest cached blocks, firing
+    ``on_evict`` so the index drops its entries (counted in
+    ``evicted_blocks``).
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -98,34 +110,207 @@ class BlockPool:
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self.ref: List[int] = [0] * num_blocks
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self._cached: set = set()
+        self.on_evict: Optional[Callable[[int], None]] = None
+        self.evicted_blocks = 0
 
     @property
     def num_free(self) -> int:
-        return len(self._free)
+        return len(self._free) + len(self._lru)
 
     @property
     def num_used(self) -> int:
-        return (self.num_blocks - 1) - len(self._free)
+        return (self.num_blocks - 1) - self.num_free
 
     def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+        return n <= self.num_free
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        if n > len(self._free):
+        if n > self.num_free:
             return None
-        out = [self._free.pop() for _ in range(n)]
+        out: List[int] = []
+        for _ in range(n):
+            if self._free:
+                b = self._free.pop()
+            else:
+                # evict the least-recently-used cached block; its KV is
+                # reusable only via the index, which on_evict invalidates
+                b, _ = self._lru.popitem(last=False)
+                self._cached.discard(b)
+                self.evicted_blocks += 1
+                if self.on_evict is not None:
+                    self.on_evict(b)
+            self.ref[b] = 1
+            out.append(b)
         return out
 
-    def free(self, blocks: List[int]) -> None:
+    def free(self, blocks: Sequence[int]) -> None:
+        """Drop one reference per listed block.
+
+        Raises on block ids outside the pool, on the null block, and on
+        blocks whose refcount is already zero (double free, or freeing a
+        never-allocated id) — once blocks are shared between tables a
+        silent bad free corrupts another request's KV.
+        """
         for b in blocks:
             if not 0 < b < self.num_blocks:
                 raise ValueError(f"bad block id {b}")
-            if b in self._free:
-                raise ValueError(f"double free of block {b}")
-            self._free.append(b)
+            if self.ref[b] <= 0:
+                raise ValueError(
+                    f"double free (or free of never-allocated) block {b}")
+            self.ref[b] -= 1
+            if self.ref[b] == 0:
+                if b in self._cached:
+                    self._lru[b] = None       # most-recently-used end
+                else:
+                    self._free.append(b)
+
+    def share(self, blocks: Sequence[int]) -> None:
+        """Take an extra reference on each block (a prefix-cache hit
+        mapping cached blocks into a new table).  Blocks parked in the
+        LRU (refcount 0, index-reachable) are revived; live blocks just
+        gain a reference."""
+        for b in blocks:
+            if not 0 < b < self.num_blocks:
+                raise ValueError(f"bad block id {b}")
+            if self.ref[b] == 0:
+                if b not in self._lru:
+                    raise ValueError(
+                        f"share of free, un-cached block {b}")
+                del self._lru[b]
+            self.ref[b] += 1
+
+    def mark_cached(self, block: int) -> None:
+        """Flag a live block as registered in the prefix index: at
+        refcount zero it parks in the LRU instead of the free list."""
+        if self.ref[block] <= 0:
+            raise ValueError(f"mark_cached of free block {block}")
+        self._cached.add(block)
+
+    def touch(self, blocks: Sequence[int]) -> None:
+        """Refresh LRU recency for cached blocks hit while parked."""
+        for b in blocks:
+            if b in self._lru:
+                self._lru.move_to_end(b)
 
     def used_bytes(self, bytes_per_block: int) -> int:
         return self.num_used * bytes_per_block
+
+
+# ---------------------------------------------------------------------------
+# prefix cache: block-aligned hash index over token prefixes
+# ---------------------------------------------------------------------------
+
+def _chain_hash(prev: int, tokens: Sequence[int]) -> int:
+    """crc32-chained hash of one block's tokens, keyed by the hash of
+    everything before it.  crc32 (not ``hash``) so the index is
+    deterministic across processes — the tp=2 parity tests replay the
+    same trace in subprocesses."""
+    data = prev.to_bytes(4, "little") + \
+        b"".join(int(t).to_bytes(4, "little", signed=True) for t in tokens)
+    return zlib.crc32(data)
+
+
+class PrefixCache:
+    """Block-aligned prefix index over the pool.
+
+    Maps the chained hash of each *full* block of prompt tokens to the
+    physical block holding its KV.  Consulted at admission: the longest
+    chain of consecutive full-block hits is mapped (refcounted) into
+    the new request's table and only the tail is prefilled.  One index
+    entry per physical block; eviction from the pool's LRU invalidates
+    the entry via ``pool.on_evict``.
+
+    The index never has to invalidate on writes: a registered block's
+    contents are immutable — any KV write into a block with refcount > 1
+    goes through copy-on-write, and a sole owner appending into its
+    registered tail block would first diverge from the hashed token
+    string only at positions past the hashed span (full blocks hash all
+    ``block_size`` tokens, so appends always land in later blocks).
+    """
+
+    def __init__(self, pool: BlockPool):
+        self.pool = pool
+        self.block_size = pool.block_size
+        self._by_hash: Dict[int, int] = {}
+        self._by_block: Dict[int, int] = {}
+        self.lookups = 0
+        self.hits = 0
+        self.hit_blocks = 0
+        self.tokens_saved = 0
+        pool.on_evict = self._evict
+
+    def _evict(self, block: int) -> None:
+        h = self._by_block.pop(block, None)
+        if h is not None and self._by_hash.get(h) == block:
+            del self._by_hash[h]
+
+    def match(self, tokens: Sequence[int]) -> Tuple[List[int], int]:
+        """Longest cached prefix of ``tokens``.
+
+        Returns ``(shared_blocks, cached_tokens)``.  ``cached_tokens``
+        is capped at ``len(tokens) - 1`` so at least one tail token is
+        always prefilled — prefill produces the logits row the first
+        sampled token comes from, and a fully resident prompt would
+        leave nothing to run.  When that cap lands mid-block, the final
+        shared block is the one a later divergent append copy-on-writes.
+        """
+        self.lookups += 1
+        bs = self.block_size
+        n = len(tokens)
+        hit: List[int] = []
+        h = 0
+        for i in range(n // bs):
+            h = _chain_hash(h, tokens[i * bs:(i + 1) * bs])
+            b = self._by_hash.get(h)
+            if b is None:
+                break
+            hit.append(b)
+        cached = min(len(hit) * bs, n - 1)
+        if cached <= 0:
+            return [], 0
+        shared = hit[:blocks_for(cached, bs)]
+        self.pool.touch(shared)
+        return shared, cached
+
+    def note_hit(self, shared: Sequence[int], cached: int) -> None:
+        """Count a hit that actually admitted (the scheduler calls this
+        after the tail allocation succeeds, so a request that waits and
+        retries is not double-counted)."""
+        self.hits += 1
+        self.hit_blocks += len(shared)
+        self.tokens_saved += cached
+
+    def register(self, tokens: Sequence[int], blocks: Sequence[int]) -> None:
+        """Index every full block of a freshly prefilled prompt.
+
+        First-wins on hash collision at the index level; the physical
+        block keeps exactly one index entry (re-registering a shared
+        block that already carries its own hash is a no-op)."""
+        bs = self.block_size
+        h = 0
+        for i in range(len(tokens) // bs):
+            h = _chain_hash(h, tokens[i * bs:(i + 1) * bs])
+            if i >= len(blocks):
+                break
+            b = blocks[i]
+            if self._by_hash.get(h) == b:
+                continue                       # already indexed (shared hit)
+            if h in self._by_hash or b in self._by_block:
+                continue                       # first-wins; keep 1:1 mapping
+            self._by_hash[h] = b
+            self._by_block[b] = h
+            self.pool.mark_cached(b)
+
+
+def copy_pool_block(cache: Params, src: jax.Array, dst: jax.Array) -> Params:
+    """Copy one physical block's KV across the whole pool pytree
+    (copy-on-write: a shared block is duplicated before the writer's
+    next scatter).  ``src``/``dst`` are int32 scalars so one jitted
+    trace serves every copy."""
+    return jax.tree.map(lambda pg: pg.at[:, dst].set(pg[:, src]), cache)
 
 
 # ---------------------------------------------------------------------------

@@ -40,7 +40,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, List, Optional, Sequence
 
-from repro.serving.kv_cache import BlockPool, blocks_for, bucket_for
+from repro.serving.kv_cache import (BlockPool, PrefixCache, blocks_for,
+                                    bucket_for)
 
 
 @dataclass
@@ -61,6 +62,9 @@ class SeqSlot:
     prefilled: int = 0            # prompt tokens resident (chunked mode)
     prefill_target: int = 0       # prompt tokens to make resident (0 =
                                   # monolithic prefill, done at admit)
+    cached: int = 0               # prompt tokens covered by a prefix-cache
+                                  # hit at admission (shared blocks mapped
+                                  # in; only tokens past this are prefilled)
 
     @property
     def prefilling(self) -> bool:
@@ -79,10 +83,12 @@ class Scheduler:
     """
 
     def __init__(self, slots: int, max_seq: int,
-                 pool: Optional[BlockPool] = None, min_bucket: int = 16):
+                 pool: Optional[BlockPool] = None, min_bucket: int = 16,
+                 prefix: Optional[PrefixCache] = None):
         self.slots = slots
         self.max_seq = max_seq
         self.pool = pool
+        self.prefix = prefix
         self.min_bucket = min_bucket
         if pool is not None:
             self.min_bucket = max(min_bucket, pool.block_size)
@@ -143,6 +149,13 @@ class Scheduler:
         admission never has to find room for a whole long prompt up
         front — the per-chunk analog of decode's lazy block growth.
 
+        With a prefix cache, the longest chain of cached full blocks is
+        pinned (refcounted) into the new table FIRST — pinning before
+        the tail allocation keeps ``alloc``'s LRU eviction from cycling
+        the very blocks the hit needs — and only the un-cached tail's
+        blocks are allocated; on shortfall the pin is rolled back and
+        the request waits as usual.
+
         Returns the newly filled SeqSlot (prefill is the engine's job)
         or None when nothing can be admitted right now.
         """
@@ -153,13 +166,23 @@ class Scheduler:
         if free_slot is None:
             return None
         req = self.queue[0]
-        n_tok = len(req.resume_tokens())
-        reserve = min(n_tok, chunk) if chunk else n_tok
+        tokens = req.resume_tokens()
+        n_tok = len(tokens)
         blocks: List[int] = []
+        shared: List[int] = []
+        cached = 0
         if self.pool is not None:
-            got = self.pool.alloc(blocks_for(reserve,
-                                             self.pool.block_size))
+            if self.prefix is not None:
+                shared, cached = self.prefix.match(tokens)
+                if shared:
+                    self.pool.share(shared)
+            reserve = min(n_tok, cached + chunk) if chunk else n_tok
+            need = blocks_for(reserve, self.pool.block_size) - len(shared)
+            got = self.pool.alloc(max(need, 0))
             if got is None:
+                if shared:
+                    self.pool.free(shared)        # unpin; blocks return
+                                                  # to the LRU, index kept
                 if self.num_active() == 0 and \
                         self.pool.num_used == 0:
                     # whole pool free yet still short: this request can
@@ -171,12 +194,17 @@ class Scheduler:
                         f"blocks but the pool holds only "
                         f"{self.pool.num_blocks - 1}; increase num_blocks")
                 return None          # pool pressure: wait for finishes
-            blocks = got
+            blocks = shared + got
+            if shared:
+                self.prefix.note_hit(shared, cached)
         self.queue.popleft()
-        seq = SeqSlot(req=req, pos=0 if chunk else n_tok, blocks=blocks,
+        seq = SeqSlot(req=req, pos=cached if chunk else n_tok,
+                      blocks=blocks,
                       admit_seq=self._admit_counter,
                       resumed=bool(req.out),
-                      prefill_target=n_tok if chunk else 0)
+                      prefilled=cached if chunk else 0,
+                      prefill_target=n_tok if chunk else 0,
+                      cached=cached)
         self._admit_counter += 1
         self.active[free_slot] = seq
         return seq
@@ -275,6 +303,33 @@ class Scheduler:
                 self._preempt(victim)
                 preempted.append(victim)
         return preempted
+
+    def cow_alloc(self, seq: SeqSlot, allow_preempt: bool = True
+                  ) -> "tuple[Optional[int], List[SeqSlot]]":
+        """One fresh block for a copy-on-write split of a shared block
+        in ``seq``'s table.
+
+        Same grow-or-preempt policy as decode growth: newest-victim
+        recompute preemption when the pool is dry, unless
+        ``allow_preempt`` is False (retry-capable chunk path) — then
+        ``(None, [])`` and the caller tries again next step.  Returns
+        ``(block, preempted)``; the engine resets the victims' host
+        decode state exactly as after :meth:`ensure_decode_capacity`.
+        """
+        preempted: List[SeqSlot] = []
+        while True:
+            got = self.pool.alloc(1)
+            if got is not None:
+                return got[0], preempted
+            if not allow_preempt:
+                return None, preempted
+            victim = self._pick_victim(exclude=seq)
+            if victim is None:
+                raise RuntimeError(
+                    "KV block pool exhausted by a copy-on-write split; "
+                    "increase num_blocks")
+            self._preempt(victim)
+            preempted.append(victim)
 
     def reserve_lookahead(self, steps: int) -> bool:
         """All-or-nothing block reservation for a multi-step decode window.

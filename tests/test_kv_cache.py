@@ -48,6 +48,26 @@ def test_block_pool_double_free_rejected():
         pool.free([0])                             # null block untouchable
 
 
+def test_block_pool_bad_free_rejected():
+    """Freeing ids the pool never granted must raise, not silently
+    corrupt another table's refcounts (blocks are shared under the
+    prefix cache, so a bad free can recycle a live block)."""
+    pool = BlockPool(num_blocks=4, block_size=16)
+    with pytest.raises(ValueError, match="never-allocated"):
+        pool.free([2])                             # in range, never granted
+    with pytest.raises(ValueError, match="bad block id"):
+        pool.free([4])                             # out of range
+    with pytest.raises(ValueError, match="bad block id"):
+        pool.free([-1])
+    a = pool.alloc(1)
+    pool.share(a)                                  # ref 2: two tables
+    pool.free(a)
+    pool.free(a)                                   # both owners release
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(a)                               # third free is a bug
+    assert pool.num_free == 3                      # accounting intact
+
+
 def test_bucket_for_pow2():
     assert bucket_for(1, 256) == 16
     assert bucket_for(16, 256) == 16
