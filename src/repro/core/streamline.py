@@ -240,6 +240,31 @@ def chunk_prefill_layer(p: Params, x: jax.Array,
     return x + y, {"k": kc, "v": vc}
 
 
+def verify_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                 block_tables: jax.Array, positions: jax.Array, *, cfg,
+                 plan, use_kernels: bool = True, interpret: bool = True,
+                 paged_kernel: str = "auto"
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decoder layer over one speculative verify window.
+
+    A verify window flattens every slot's (last token + k drafts) into
+    Q = B*(k+1) single-token queries, each with its OWN block table and
+    absolute position.  That is EXACTLY the streamed decode dataflow:
+    :func:`decode_layer` scatters all Q new KV rows into the pool first
+    and then attends each query over ``positions + 1`` tokens through
+    its table — so draft i sees drafts < i of the same window (their
+    positions are smaller) plus all resident history, with zero new
+    kernel code.  This delegate exists to name that contract; the
+    full-model analogue is :func:`repro.models.attention.verify_attention`.
+
+    x: (Q, D); block_tables: (Q, T); positions: (Q,).
+    """
+    return decode_layer(p, x, cache, positions, cfg=cfg, plan=plan,
+                        use_kernels=use_kernels, interpret=interpret,
+                        block_table=block_tables,
+                        paged_kernel=paged_kernel)
+
+
 def stream_bytes_per_layer(cfg, plan, kv_len: int) -> int:
     """Analytic bytes streamed per token per layer (latency model input)."""
     a = plan.attn

@@ -31,7 +31,13 @@ per step, interleaved with decode windows, so a long prompt never stalls
 in-flight streams — 0 = today's monolithic bucketed prefill),
 ``--prefix-cache {on,off}`` (prefix caching: a shared system prompt's
 blocks are prefilled once and mapped — refcounted, copy-on-write — into
-every later request's table; only the un-cached tail prefills).
+every later request's table; only the un-cached tail prefills),
+``--speculate {off,ngram,model}`` + ``--draft-k K`` (speculative
+decoding: a drafter proposes K tokens per slot, ONE chunk-as-batch
+verify pass scores them against the pool, and rejection sampling
+accepts a prefix — greedy streams bit-identical, stochastic streams
+exactly target-distributed; ``model`` drafts with a reduced smollm-135m
+running greedily at batch 1).
 """
 from __future__ import annotations
 
@@ -109,6 +115,15 @@ def main():
                          "a cached block-aligned prefix map the shared "
                          "blocks (refcounted, copy-on-write) into their "
                          "table and prefill only the tail (paged only)")
+    ap.add_argument("--speculate", default="off",
+                    choices=("off", "ngram", "model"),
+                    help="speculative decoding: draft k tokens per slot "
+                         "(ngram: suffix-match over the visible stream; "
+                         "model: a reduced smollm-135m drafter), verify "
+                         "all of them in ONE chunk-as-batch pass and "
+                         "accept a rejection-sampled prefix (paged only)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens proposed per speculative round")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -127,6 +142,17 @@ def main():
                           param_dtype="float32")
     model = build_model(cfg, plan)
     params, _ = model.init(jax.random.PRNGKey(0))
+    draft_model = draft_params = None
+    if args.speculate == "model":
+        # the drafter is its own tiny model: always single-device (it
+        # proposes on the host loop), reduced so it is cheap relative
+        # to the target
+        dcfg = get_config("smollm-135m").reduced()
+        dplan = plan_model(dcfg, None, (1,), "serve", esl_overlap=False,
+                           remat="none", compute_dtype="float32",
+                           param_dtype="float32")
+        draft_model = build_model(dcfg, dplan)
+        draft_params, _ = draft_model.init(jax.random.PRNGKey(1))
     engine_kw = dict(slots=args.slots, max_seq=args.max_seq,
                      paged=False if args.dense else None,
                      block_size=args.block_size,
@@ -138,7 +164,9 @@ def main():
                      steps_per_sync=args.steps_per_sync,
                      block_s=args.block_s,
                      prefill_chunk=args.prefill_chunk,
-                     prefix_cache=args.prefix_cache == "on")
+                     prefix_cache=args.prefix_cache == "on",
+                     speculate=args.speculate, draft_k=args.draft_k,
+                     draft_model=draft_model, draft_params=draft_params)
     if rings > 1:
         engine = MultiRingEngine(model, params, mesh, ring_size=tp,
                                  **engine_kw)
@@ -194,6 +222,11 @@ def main():
               f"hit_blocks={st.prefix_hit_blocks}, "
               f"prefill_tokens_saved={st.prefill_tokens_saved}, "
               f"cow={st.cow_blocks}, evicted={st.evicted_blocks}")
+        print(f"[serve] speculate={first.speculate} "
+              f"draft_k={first.draft_k}: {st.spec_rounds} rounds, "
+              f"accepted {st.accepted_tokens}/{st.draft_tokens} drafts "
+              f"(rate {st.acceptance_rate:.2f}, "
+              f"{st.accepted_per_window:.2f}/window)")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o[:12]}")
 

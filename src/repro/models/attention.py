@@ -346,6 +346,72 @@ def chunk_prefill_attention(p: Params, x: jax.Array, *, cfg, plan,
     return out_proj(p, out, env, plan), new_cache
 
 
+def verify_attention(p: Params, x: jax.Array, *, cfg, plan,
+                     env: AxisEnv, positions: jax.Array,
+                     cache: Dict[str, jax.Array],
+                     block_tables: jax.Array,
+                     kv_valid_len: jax.Array,
+                     paged_kernel: str = "auto"
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Score a speculative verify window against the block pool.
+
+    Every decode slot's (last committed token + k draft tokens) are
+    flattened into ONE batch of single-token queries — the chunk-as-
+    batch trick of :func:`chunk_prefill_attention`, generalized to
+    per-query block tables so many requests verify in one kernel call.
+
+    x:            (1, Q, D[/tp]) flattened queries, Q = B*(k+1)
+    positions:    (1, Q) each query's absolute position
+    block_tables: (Q, T) each query's OWN table (a slot's k+1 rows
+                  repeat its table; idle slots ride the null block)
+    kv_valid_len: (Q,) per-query causal span INCLUDING self
+                  (``pos + 1``; clamped >= 1 for idle rows).
+
+    Draft K/V scatters into the pool FIRST (per-query tables via
+    :func:`repro.serving.kv_cache.scatter_spec_rows`), then each query
+    attends its own length-masked span — so draft i sees drafts < i of
+    the same window plus all resident history, exactly the sequential
+    decode dataflow.  This is why verify cannot reuse decode's
+    pre-update-read contract (the in-kernel fold only covers a query's
+    OWN new token, not its window predecessors).  Rejected drafts need
+    no undo: their rows land past the accepted resident length, stay
+    masked, and are overwritten idempotently by later windows.
+    """
+    from repro.serving.kv_cache import scatter_spec_rows
+    a = plan.attn
+    q, k, v = qkv_proj(p, x, env, plan)
+    if cfg.positional == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    pos = positions[0]
+    lens = kv_valid_len
+    valid = lens > pos
+    kc = scatter_spec_rows(cache["k"], k[0], block_tables, pos, valid)
+    vc = scatter_spec_rows(cache["v"], v[0], block_tables, pos, valid)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = kc, vc
+
+    bs = kc.shape[1]
+    mode = resolve_paged_kernel(plan, bs, paged_kernel)
+    if mode == "stream":
+        out = paged_decode_attention(
+            q[0], kc, vc, block_tables, lens, use_pallas=True,
+            interpret=da_ops.default_interpret())[None]
+    else:
+        Q, T = block_tables.shape
+        kview = kc[block_tables].reshape(Q, T * bs, kc.shape[2],
+                                         kc.shape[3])
+        vview = vc[block_tables].reshape(Q, T * bs, vc.shape[2],
+                                         vc.shape[3])
+        kmap = local_kmap(plan, env)
+        ke = _expand_kv(kview, kmap, a.q_per_rank)
+        ve = _expand_kv(vview, kmap, a.q_per_rank)
+        out = flash_attention(q[0][:, None], ke, ve, causal=True,
+                              q_offset=pos, kv_valid_len=lens)
+        out = out.swapaxes(0, 1)
+    return out_proj(p, out, env, plan), new_cache
+
+
 def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                      cache: Dict[str, jax.Array], positions: jax.Array,
                      block_table: Optional[jax.Array] = None,

@@ -60,8 +60,8 @@ class Model:
                 raise ValueError(
                     "block_s override is not supported for encdec "
                     "decode (no paged/flash-chunk seam to tune)")
-            if mode == "chunk_prefill":
-                raise ValueError("chunked prefill needs the paged pool; "
+            if mode in ("chunk_prefill", "verify"):
+                raise ValueError(f"mode={mode!r} needs the paged pool; "
                                  "encdec has no paged cache")
             return wh.forward_encdec(
                 params, tokens, cfg=self.cfg, plan=self.plan, env=env,

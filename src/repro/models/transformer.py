@@ -279,6 +279,15 @@ def apply_layer(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
                 block_table=block_tables, kv_valid_len=kv_valid_len,
                 paged_kernel=paged_kernel)
             new_cache = kv
+        elif mode == "verify":
+            # speculative verify: flattened per-query tables and
+            # per-query valid lengths (see verify_attention)
+            h, kv = attn_mod.verify_attention(
+                p["attn"], h_in, cfg=cfg, plan=plan, env=env,
+                positions=positions, cache=cache,
+                block_tables=block_tables, kv_valid_len=kv_valid_len,
+                paged_kernel=paged_kernel)
+            new_cache = kv
         else:
             h = attn_mod.self_attention(
                 p["attn"], h_in, cfg=cfg, plan=plan, env=env,
@@ -473,12 +482,12 @@ def forward(params: Params, tokens: jax.Array, *, cfg, plan, env: AxisEnv,
         (x, aux_total, new_cache), _ = lax.scan(
             dec_body, (x, aux_total, cache),
             (params["blocks"], jnp.arange(n_sb)), unroll=unroll)
-    elif mode == "chunk_prefill":
-        # chunk prefill: like decode, the pool rides the scan CARRY so
-        # XLA's while-loop buffer aliasing can keep the per-layer
-        # slice -> scatter -> write-back chain in place, instead of the
-        # xs->ys stacking (whose separate input/output buffers force a
-        # full pool copy per layer per chunk)
+    elif mode in ("chunk_prefill", "verify"):
+        # chunk prefill + speculative verify: like decode, the pool
+        # rides the scan CARRY so XLA's while-loop buffer aliasing can
+        # keep the per-layer slice -> scatter -> write-back chain in
+        # place, instead of the xs->ys stacking (whose separate
+        # input/output buffers force a full pool copy per layer)
         def chunk_body(carry, xs):
             xc, auxc, cache_st = carry
             bp, idx = xs

@@ -1,0 +1,155 @@
+"""Draft-token proposers for speculative decoding.
+
+The speculative path in :mod:`repro.serving.engine` is
+draft-and-verify: a *drafter* proposes up to ``k`` continuation tokens
+per decode slot on the host, the engine scores all ``k+1`` positions in
+ONE paged-kernel pass (the PR 5 chunk-as-batch seam), and on-device
+rejection sampling accepts the matched prefix.  Rejection sampling is
+proposal-agnostic — a bad draft costs acceptance, never correctness —
+so drafters are free to be cheap heuristics:
+
+* :class:`NGramDrafter` — self-speculation by suffix match: find the
+  longest recent n-gram suffix of the sequence that occurred earlier
+  and propose the tokens that followed it.  Zero extra FLOPs, and on
+  repetitive text (greedy decode loops, templated output, code) it
+  predicts the target model almost perfectly.  This is the default.
+
+* :class:`ModelDrafter` — a small registry model (e.g. the
+  ``smollm_135m`` config ``reduced()``) decoded greedily on the host
+  path.  Stateless between calls: each proposal re-scores the full
+  context through pow2-bucketed dense forwards, so rollback after a
+  rejected window is free (nothing to roll back).  Meant for tiny draft
+  models where k extra dense forwards are still far cheaper than k
+  target-model steps.
+
+Drafters are deterministic by contract: the verify path's rejection
+sampler assumes a one-hot proposal distribution (accept draft ``d``
+with probability ``p(d)``), and greedy bit-parity with non-speculative
+decoding relies on the draft sequence being a pure function of the
+visible tokens.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+class NGramDrafter:
+    """Propose the continuation of the longest matched suffix n-gram.
+
+    For context ``t_0 .. t_{n-1}``, try suffix lengths ``max_n .. 1``:
+    if the length-m suffix re-occurs earlier in the context, propose the
+    ``k`` tokens that followed its MOST RECENT earlier occurrence.
+    Returns ``[]`` on a cold miss (the engine then runs a normal
+    non-speculative round for that window).
+    """
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        if not 1 <= min_n <= max_n:
+            raise ValueError(f"need 1 <= min_n <= max_n, got "
+                             f"({min_n}, {max_n})")
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def _next(self, toks: List[int]) -> Optional[int]:
+        """Predict ONE token: longest suffix n-gram, most recent match."""
+        n = len(toks)
+        for m in range(min(self.max_n, n - 1), self.min_n - 1, -1):
+            pat = toks[n - m:]
+            # j = exclusive end of a candidate earlier occurrence; the
+            # window may overlap the suffix (periodic text, period < m)
+            for j in range(n - 1, m - 1, -1):
+                if toks[j - m:j] == pat:
+                    return toks[j]
+        return None
+
+    def propose(self, tokens: Sequence[int], k: int) -> List[int]:
+        ext = list(tokens)
+        out: List[int] = []
+        for _ in range(k):
+            t = self._next(ext)
+            if t is None:
+                break
+            out.append(t)
+            ext.append(t)
+        return out
+
+
+class ModelDrafter:
+    """Greedy draft proposals from a small registry model.
+
+    Runs the draft model's dense forward over the full visible context
+    (pow2-bucketed so trace count stays O(log2 max_seq)) and extends it
+    greedily token by token — ``k`` forwards per proposal.  The draft
+    model keeps NO cross-call state, so rejected speculation windows
+    need no draft-side rollback and preemption/recompute are free.
+    """
+
+    def __init__(self, model, params, max_seq: int = 2048):
+        from repro.core.dist import make_axis_env
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.env = make_axis_env(model.plan, batch=1)
+        self._jits = {}
+
+    def _row_fn(self, bucket: int):
+        """jit per pow2 bucket: full dense forward, last valid row out.
+
+        Right padding is invisible to the causal rows <= n_valid-1, so
+        the padded forward scores the true context exactly.
+        """
+        fn = self._jits.get(bucket)
+        if fn is None:
+            def run(params, toks, n_valid):
+                logits, _, _ = self.model.forward(params, toks,
+                                                  env=self.env,
+                                                  mode="train")
+                return jax.lax.dynamic_index_in_dim(
+                    logits[0], n_valid - 1, 0, keepdims=False)
+            fn = jax.jit(run)
+            self._jits[bucket] = fn
+        return fn
+
+    def propose(self, tokens: Sequence[int], k: int) -> List[int]:
+        toks = list(tokens)
+        out: List[int] = []
+        for _ in range(k):
+            n = len(toks)
+            if n >= self.max_seq:
+                break
+            bucket = 1
+            while bucket < n:
+                bucket *= 2
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :n] = toks
+            row = self._row_fn(bucket)(self.params,
+                                       jax.numpy.asarray(padded),
+                                       jax.numpy.int32(n))
+            nxt = int(np.argmax(np.asarray(row)))
+            out.append(nxt)
+            toks.append(nxt)
+        return out
+
+
+def make_drafter(kind: str, *, draft_model=None, draft_params=None,
+                 max_seq: int = 2048) -> Optional[object]:
+    """Build the drafter for ``LPUEngine(speculate=...)``.
+
+    ``"ngram"`` needs nothing; ``"model"`` needs a built registry model
+    + params (e.g. ``get_config("smollm-135m").reduced()``) passed as
+    ``draft_model`` / ``draft_params``.
+    """
+    if kind == "off":
+        return None
+    if kind == "ngram":
+        return NGramDrafter()
+    if kind == "model":
+        if draft_model is None or draft_params is None:
+            raise ValueError(
+                "speculate='model' needs draft_model/draft_params "
+                "(a small registry model, e.g. smollm-135m reduced)")
+        return ModelDrafter(draft_model, draft_params, max_seq=max_seq)
+    raise ValueError(f"unknown speculate mode {kind!r}")

@@ -99,8 +99,12 @@ from repro.serving.kv_cache import (LANE, BlockPool, PrefixCache,
                                     pool_blocks_for_budget,
                                     scatter_prefill_dense,
                                     scatter_prefill_pages)
+from repro.serving.drafter import make_drafter
 from repro.serving.sampler import (SamplingParams, sample_batched,
-                                   sample_local, sample_sharded_batched)
+                                   sample_local, sample_sharded_batched,
+                                   spec_verify_rows,
+                                   speculative_verify_sharded,
+                                   split_spec_rng_chain)
 from repro.serving.scheduler import RingRouter, Scheduler, SeqSlot
 
 StreamCB = Callable[[int, int], None]   # (request_id, token)
@@ -161,6 +165,9 @@ class EngineStats:
                                   # the pool's LRU under pressure
     cow_blocks: int = 0           # copy-on-write splits: a shared block
                                   # copied before a divergent KV write
+    spec_rounds: int = 0          # speculative verify rounds dispatched
+    draft_tokens: int = 0         # drafter-proposed tokens verified
+    accepted_tokens: int = 0      # ...accepted by rejection sampling
 
     @property
     def tokens_per_s(self) -> float:
@@ -186,6 +193,20 @@ class EngineStats:
         one shared block into the admitted table."""
         return self.prefix_hits / max(self.prefix_lookups, 1)
 
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafter-proposed tokens the verify pass accepted
+        (counts only REAL proposals, never the padding of slots the
+        drafter had nothing for)."""
+        return self.accepted_tokens / max(self.draft_tokens, 1)
+
+    @property
+    def accepted_per_window(self) -> float:
+        """Mean accepted draft tokens per speculative round — the
+        latency win: each accepted token is one decode step the engine
+        did not have to run."""
+        return self.accepted_tokens / max(self.spec_rounds, 1)
+
 
 class LPUEngine:
     """Slot-based continuous-batching decode engine (single host).
@@ -207,7 +228,9 @@ class LPUEngine:
                  paged_kernel: str = "auto", sampling: str = "fused",
                  steps_per_sync: int = 1, pipeline: bool = True,
                  block_s: int = 0, prefill_chunk: int = 0,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, speculate: str = "off",
+                 draft_k: int = 4, drafter=None, draft_model=None,
+                 draft_params=None):
         self.model = model
         self.cfg = model.cfg
         self.plan = model.plan
@@ -332,6 +355,32 @@ class LPUEngine:
         self.prefix_cache = bool(prefix_cache)
         self.prefix = PrefixCache(pool) if (self.paged and prefix_cache) \
             else None
+        # speculative decoding (--speculate): a cheap drafter proposes up
+        # to draft_k tokens per slot; ONE chunk-as-batch verify pass
+        # scores all k+1 positions against the pool and on-device
+        # rejection sampling accepts a prefix — stochastic streams draw
+        # from exactly the target distribution and greedy streams are
+        # bit-identical to the plain engine (repro.serving.sampler.
+        # _verify_rows).  ``drafter=`` injects a custom proposer (tests
+        # use adversarial / oracle drafters); otherwise ``speculate``
+        # picks the built-in n-gram or small-model drafter.
+        if speculate not in ("off", "ngram", "model"):
+            raise ValueError(f"speculate={speculate!r} not in "
+                             "('off', 'ngram', 'model')")
+        if draft_k < 1:
+            raise ValueError(f"draft_k={draft_k} must be >= 1")
+        self.drafter = drafter if drafter is not None else make_drafter(
+            speculate, draft_model=draft_model, draft_params=draft_params,
+            max_seq=max_seq)
+        if self.drafter is not None and not self.paged:
+            raise ValueError(
+                "speculate needs the paged KV pool: the verify pass "
+                "scatters draft KV per-query through block tables")
+        self.speculate = ("off" if self.drafter is None
+                          else (speculate if speculate != "off"
+                                else "custom"))
+        self.draft_k = int(draft_k)
+        self._verify_jits: Dict[tuple, Callable] = {}
         self.sched = Scheduler(slots, max_seq, pool, min_bucket,
                                prefix=self.prefix)
         self.stats = EngineStats()
@@ -461,6 +510,57 @@ class LPUEngine:
         row = lax.dynamic_index_in_dim(logits[0], n_valid - 1, 0,
                                        keepdims=False)
         return row, new_cache
+
+    def _verify_fwd(self, params, cache, tokens, positions, tables, lens):
+        """Forward of ONE speculative verify window.
+
+        Every decode slot's (committed token + K drafts) ride flattened
+        as a (1, B*(K+1)) batch of single-token queries with PER-QUERY
+        block tables and valid lengths (``mode="verify"`` — see
+        :func:`repro.models.attention.verify_attention`): query i of a
+        slot attends its resident history plus the drafts before it, so
+        one program scores all K+1 positions of every slot.  Returns
+        the (B*(K+1), V) logits and the pool with the draft KV
+        scattered in; rows past the accepted prefix are STALE but
+        harmless — ``seq.pos`` never advances over them, so they are
+        masked by valid length and overwritten by the next round's
+        writes (logical rollback, zero device work)."""
+        logits, new_cache, _ = self.model.forward(
+            params, tokens, env=self.env1, mode="verify",
+            positions=positions, cache=cache, block_tables=tables,
+            paged_kernel=self.paged_kernel or "gather",
+            kv_valid_len=lens)
+        return logits[0], new_cache
+
+    def _verify_fused_fn(self, K, params, cache, tokens, positions,
+                         tables, lens, draft, rng, temps, top_ks,
+                         top_ps, alive):
+        """Verify forward + in-jit rejection sampling (C1 composed with
+        speculation): only (out, n_acc) int32 vectors cross to the host,
+        never the (B, K+1, V) verify logits."""
+        rows, cache = self._verify_fwd(params, cache, tokens, positions,
+                                       tables, lens)
+        rows = rows.reshape(self.slots, K + 1, -1)
+        out, n_acc, rng = speculative_verify_sharded(
+            rows, draft, rng, temps, top_ks, top_ps, alive,
+            self.env.model, self.tp)
+        return out, n_acc, cache, rng
+
+    def _verify(self, K: int) -> Callable:
+        """The jitted verify program for draft length ``K`` (one trace
+        per distinct K; rounds cap K near the end of a sequence, so
+        only a handful of values ever trace)."""
+        key = (K, self.sampling == "fused")
+        fn = self._verify_jits.get(key)
+        if fn is None:
+            if self.mesh is not None:
+                fn = self._build_mesh_verify(K)
+            elif self.sampling == "fused":
+                fn = jax.jit(partial(self._verify_fused_fn, K))
+            else:
+                fn = jax.jit(self._verify_fwd)
+            self._verify_jits[key] = fn
+        return fn
 
     # -- ring-parallel (shard_map) step construction -------------------
 
@@ -598,6 +698,39 @@ class LPUEngine:
             lambda params, cache, tables, *rest: sm.lower(params, cache,
                                                           *rest)
         return drop_tables
+
+    def _build_mesh_verify(self, K: int) -> Callable:
+        """shard_map form of the verify program over the model ring.
+
+        Tokens / positions / tables / drafts are replicated host state
+        in, verified token ids come out replicated: every rank runs the
+        identical rng chain over the all-gathered (tp x 64) candidate
+        set (:func:`speculative_verify_sharded`), so the full verify
+        logits never leave the ranks — same contract as the fused
+        window.  The host-sampling variant returns the vocab-sharded
+        logits rows instead (the parity oracle reads them back)."""
+        mesh, m = self.mesh, self.plan.tp_axis
+        specs, cspecs = self._mesh_specs
+        rep1, rep2 = P(None), P(None, None)
+        if self.sampling == "fused":
+            def ver(params, cache, tokens, positions, tables, lens,
+                    draft, rng, temps, top_ks, top_ps, alive):
+                return self._verify_fused_fn(
+                    K, params, cache, tokens, positions, tables, lens,
+                    draft, rng, temps, top_ks, top_ps, alive)
+            return jax.jit(shard_map(
+                ver, mesh=mesh,
+                in_specs=(specs, cspecs, rep2, rep2, rep2, rep1, rep2,
+                          rep1, rep1, rep1, rep1, rep1),
+                out_specs=(rep2, rep1, cspecs, rep1), check_vma=False))
+
+        def ver_h(params, cache, tokens, positions, tables, lens):
+            return self._verify_fwd(params, cache, tokens, positions,
+                                    tables, lens)
+        return jax.jit(shard_map(
+            ver_h, mesh=mesh,
+            in_specs=(specs, cspecs, rep2, rep2, rep2, rep1),
+            out_specs=(P(None, m), cspecs), check_vma=False))
 
     # -- sampling ------------------------------------------------------
 
@@ -942,7 +1075,9 @@ class LPUEngine:
             self.stats.prefill_tokens_saved = self.prefix.tokens_saved
         if self.sched.num_decoding() == 0:
             return finished
-        if self.sampling == "fused":
+        if self.drafter is not None:
+            finished += self._spec_decode_round()
+        elif self.sampling == "fused":
             finished += self._fused_decode_round()
         else:
             finished += self._host_decode_step()
@@ -1126,6 +1261,128 @@ class LPUEngine:
         finished = self._reconcile(h1)
         if h2 is not None:
             finished += self._reconcile(h2)
+        return finished
+
+    def _spec_decode_round(self) -> List[Request]:
+        """One draft-and-verify speculative round.
+
+        Per decode-ready slot the drafter proposes up to ``draft_k``
+        tokens from the request's visible token stream; ONE verify
+        program scores all K+1 positions of every slot against the pool
+        and rejection sampling accepts a per-slot prefix.  Slots the
+        drafter had nothing for ride along with zero-padded drafts:
+        rejection sampling is exact for ANY deterministic proposal, so
+        correctness never depends on the drafter — only the acceptance
+        counters (which track real proposals) do.  Rejected positions
+        roll back logically (``seq.pos`` advances only over emitted
+        tokens; stale KV is masked and overwritten next round), and the
+        copy-on-write guard runs BEFORE the speculative write, so a
+        rejected write can never have landed in a block another table
+        still references.
+
+        Rounds that cannot speculate — no proposal anywhere, no
+        head-room before max_seq, or a lookahead-block shortfall — fall
+        back to one plain round, so composition with admission,
+        chunked prefill and preemption needs no special cases.
+        """
+        K = self.draft_k
+        for seq in self.sched.active:
+            if seq is not None and not seq.prefilling:
+                K = min(K, self.max_seq - 1 - seq.pos)
+        props: Dict[int, List[int]] = {}
+        if K >= 1:
+            for slot, seq in enumerate(self.sched.active):
+                if seq is None or seq.prefilling:
+                    continue
+                p = self.drafter.propose(
+                    list(seq.req.prompt) + list(seq.req.out), K)[:K]
+                if p:
+                    props[slot] = p
+        if K < 1 or not props \
+                or not self.sched.reserve_lookahead(1, draft_k=K):
+            return (self._fused_decode_round()
+                    if self.sampling == "fused"
+                    else self._host_decode_step())
+        for seq in self.sched.active:
+            if seq is not None and not seq.prefilling:
+                self._ensure_writable(seq, seq.pos, seq.pos + K + 1)
+        self._refresh_tables()
+        (last, pos, _, alive), (temps, top_ks, top_ps, _) = \
+            self._slot_state()
+        B, K1 = self.slots, K + 1
+        toks = np.zeros((B, K1), np.int32)
+        draft = np.zeros((B, K), np.int32)
+        real = np.zeros((B,), np.int32)
+        toks[:, 0] = last
+        for slot, p in props.items():
+            draft[slot, :len(p)] = p
+            real[slot] = len(p)
+        toks[:, 1:] = draft
+        positions = pos[:, None] + np.arange(K1, dtype=np.int32)[None]
+        positions = np.where(alive[:, None], positions, 0) \
+            .astype(np.int32)
+        lens = np.where(alive[:, None], positions + 1, 1) \
+            .reshape(-1).astype(np.int32)
+        tables = np.repeat(self.block_tables, K1, axis=0)
+        flat_t = jnp.asarray(toks.reshape(1, B * K1))
+        flat_p = jnp.asarray(positions.reshape(1, B * K1))
+        if self.sampling == "fused":
+            out, n_acc, self.cache, self.rng = self._verify(K)(
+                self.params, self.cache, flat_t, flat_p,
+                jnp.asarray(tables), jnp.asarray(lens),
+                jnp.asarray(draft), self.rng, jnp.asarray(temps),
+                jnp.asarray(top_ks), jnp.asarray(top_ps),
+                jnp.asarray(alive))
+            out = np.asarray(out)
+            n_acc = np.asarray(n_acc)
+            self.stats.host_syncs += 1
+            self.stats.bytes_to_host += out.nbytes + n_acc.nbytes
+        else:
+            rows, self.cache = self._verify(K)(
+                self.params, self.cache, flat_t, flat_p,
+                jnp.asarray(tables), jnp.asarray(lens))
+            rows_np = np.asarray(rows).reshape(B, K1, -1)
+            self.stats.host_syncs += 1
+            self.stats.bytes_to_host += rows_np.nbytes
+            stoch = alive & (temps > 0.0)
+            self.rng, keys = split_spec_rng_chain(
+                self.rng, jnp.asarray(stoch), K1)
+            out = np.zeros((B, K1), np.int32)
+            n_acc = np.zeros((B,), np.int32)
+            for slot in range(B):
+                if not alive[slot]:
+                    continue
+                o, n = spec_verify_rows(
+                    jnp.asarray(rows_np[slot]),
+                    jnp.asarray(draft[slot]), keys[slot],
+                    jnp.float32(temps[slot]), jnp.int32(top_ks[slot]),
+                    jnp.float32(top_ps[slot]))
+                out[slot] = np.asarray(o)
+                n_acc[slot] = int(n)
+        finished: List[Request] = []
+        self.stats.steps += 1
+        self.stats.spec_rounds += 1
+        self.stats.slot_steps += self.slots
+        for slot, seq in enumerate(self.sched.active):
+            if seq is None or seq.prefilling:
+                continue
+            req = seq.req
+            self.stats.busy_slot_steps += 1
+            n = int(n_acc[slot])
+            self.stats.draft_tokens += int(real[slot])
+            self.stats.accepted_tokens += min(n, int(real[slot]))
+            emit = [int(t) for t in out[slot, :n + 1]]
+            for j, tok in enumerate(emit):
+                self.stats.tokens += 1
+                req.out.append(tok)
+                seq.pos += 1
+                seq.last_token = tok
+                if req.stream_cb:
+                    req.stream_cb(req.rid, tok)
+                if self._should_finish(seq, tok):
+                    self.stats.overrun_tokens += len(emit) - j - 1
+                    finished.append(self._finish(seq))
+                    break
         return finished
 
     def drain(self) -> Dict[int, List[int]]:

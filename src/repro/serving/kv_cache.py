@@ -375,6 +375,35 @@ def scatter_chunk_rows(pages: jax.Array, rows: jax.Array,
     return pages.at[blk, off].set(rows.astype(pages.dtype))
 
 
+def scatter_spec_rows(pages: jax.Array, rows: jax.Array,
+                      block_tables: jax.Array, positions: jax.Array,
+                      valid: jax.Array) -> jax.Array:
+    """Per-query scatter for a speculative verify window.
+
+    The verify pass flattens every slot's (k drafts + 1 last token) into
+    a batch of single-token queries, each with its OWN block table — the
+    per-query generalization of :func:`scatter_chunk_rows` (whose rows
+    all share one request's table).  Rejected drafts are never
+    un-written: their rows sit past the slot's resident length, so every
+    later read masks them out and the next window overwrites them
+    idempotently (logical rollback, zero device work).
+
+    pages:        (N, bs, G, dh) one layer of the shared pool
+    rows:         (Q, G, dh) the verify queries' freshly computed K (V)
+    block_tables: (Q, T) each query's physical block ids
+    positions:    (Q,) absolute token positions
+    valid:        (Q,) bool; idle-slot rows route to the null block 0.
+    """
+    bs = pages.shape[1]
+    T = block_tables.shape[1]
+    idx = jnp.clip(positions // bs, 0, T - 1)
+    blk = jnp.where(valid,
+                    jnp.take_along_axis(block_tables, idx[:, None],
+                                        1)[:, 0], 0)
+    off = positions % bs
+    return pages.at[blk, off].set(rows.astype(pages.dtype))
+
+
 def scatter_prefill_dense(cache: Params, prefill_cache: Params,
                           slot: jax.Array) -> Params:
     """Copy a batch=1 prefill cache into one slot of the dense cache.

@@ -72,9 +72,12 @@ def sample_local(logits: jax.Array, rng: jax.Array,
         sorted_lg = jnp.sort(lg, -1)[:, ::-1]
         probs = jax.nn.softmax(sorted_lg, -1)
         cum = jnp.cumsum(probs, -1)
-        # keep the smallest prefix with cumulative mass >= top_p
+        # keep the smallest prefix with cumulative mass >= top_p: the
+        # cutoff is the SMALLEST kept logit (jnp.min over the prefix —
+        # the old jnp.max collapsed every non-tied row to argmax, a bug
+        # the speculative statistical suite caught)
         keep = cum - probs < params.top_p
-        cutoff = jnp.max(jnp.where(keep, sorted_lg, -jnp.inf), -1,
+        cutoff = jnp.min(jnp.where(keep, sorted_lg, jnp.inf), -1,
                          keepdims=True)
         lg = jnp.where(lg >= cutoff, lg, -jnp.inf)
     return jax.random.categorical(rng, lg, -1).astype(jnp.int32)
@@ -103,16 +106,17 @@ def split_rng_chain(rng: jax.Array, stoch: jax.Array
     return lax.scan(body, rng, stoch)
 
 
-def _sample_row(lg_raw: jax.Array, key: jax.Array, temp: jax.Array,
-                top_k: jax.Array, top_p: jax.Array) -> jax.Array:
-    """One logits row (V,) -> token id, with TRACED per-slot params.
+def _filter_row(lg_raw: jax.Array, temp: jax.Array, top_k: jax.Array,
+                top_p: jax.Array) -> jax.Array:
+    """Temperature / top-k / top-p filter over one logits row (V,).
 
-    Bit-matches :func:`sample_local` on the same row: greedy
-    (``temp <= 0``) is argmax of the raw row and touches no RNG bits;
-    otherwise the same filter order (temperature -> top-k -> top-p, each
-    re-sorting the already-filtered row exactly like the host path) and
-    the same categorical draw — a (V,) gumbel stream generates the same
-    bits as the host's (1, V) call, so fused == synced token for token.
+    The shared filter chain behind both :func:`_sample_row` and the
+    speculative verify path: returns the row scaled by temperature with
+    everything outside the top-k/top-p support set to ``-inf``, so
+    ``softmax(_filter_row(row))`` IS the per-step target distribution
+    the engine samples from.  Same order as :func:`sample_local`
+    (temperature -> top-k -> top-p, each re-sorting the already-filtered
+    row), so filtered draws bit-match the host path.
     """
     V = lg_raw.shape[-1]
     lg = lg_raw / jnp.maximum(temp, 1e-6)
@@ -124,8 +128,21 @@ def _sample_row(lg_raw: jax.Array, key: jax.Array, temp: jax.Array,
     probs = jax.nn.softmax(desc, -1)
     cum = jnp.cumsum(probs, -1)
     keep = cum - probs < top_p
-    cutoff = jnp.max(jnp.where(keep, desc, -jnp.inf), -1)
-    lg = jnp.where((top_p < 1.0) & (lg < cutoff), -jnp.inf, lg)
+    cutoff = jnp.min(jnp.where(keep, desc, jnp.inf), -1)
+    return jnp.where((top_p < 1.0) & (lg < cutoff), -jnp.inf, lg)
+
+
+def _sample_row(lg_raw: jax.Array, key: jax.Array, temp: jax.Array,
+                top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """One logits row (V,) -> token id, with TRACED per-slot params.
+
+    Bit-matches :func:`sample_local` on the same row: greedy
+    (``temp <= 0``) is argmax of the raw row and touches no RNG bits;
+    otherwise the :func:`_filter_row` chain and the same categorical
+    draw — a (V,) gumbel stream generates the same bits as the host's
+    (1, V) call, so fused == synced token for token.
+    """
+    lg = _filter_row(lg_raw, temp, top_k, top_p)
     stoch_tok = jax.random.categorical(key, lg, -1)
     return jnp.where(temp <= 0.0, jnp.argmax(lg_raw, -1),
                      stoch_tok).astype(jnp.int32)
@@ -185,6 +202,172 @@ def sample_sharded_batched(logits_loc: jax.Array, rng: jax.Array,
     chosen = jax.vmap(_sample_row)(vals_all, keys, temps, top_ks, top_ps)
     toks = jnp.take_along_axis(gidx_all, chosen[:, None], 1)[:, 0]
     return toks.astype(jnp.int32), rng
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding — rejection-sampling verification of drafted tokens
+# ---------------------------------------------------------------------------
+
+def split_spec_rng_chain(rng: jax.Array, stoch: jax.Array, n: int
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Per-slot rng keys for one speculative verify window, in-jit.
+
+    The host oracle visits slots in order and, for each active
+    stochastic slot, performs ``n`` sequential
+    ``rng, sub = jax.random.split(rng)`` draws — one subkey per verify
+    position (k drafts + 1 bonus).  Greedy and idle slots consume
+    NOTHING, exactly like :func:`split_rng_chain`, so greedy streams
+    stay bit-reproducible whether or not speculation is on.  Returns
+    ``(rng', keys)`` with ``keys`` shaped (B, n, 2); non-consuming slots
+    get don't-care keys.
+    """
+    def per_slot(r, s):
+        def inner(r2, _):
+            nxt = jax.random.split(r2)
+            return nxt[0], nxt[1]
+        r_new, subs = lax.scan(inner, r, None, length=n)
+        return (jnp.where(s, r_new, r),
+                jnp.where(s, subs, jnp.broadcast_to(r, subs.shape)))
+    return lax.scan(per_slot, rng, stoch)
+
+
+def _verify_rows(vals: jax.Array, ids: jax.Array, draft: jax.Array,
+                 keys: jax.Array, temp: jax.Array, top_k: jax.Array,
+                 top_p: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Rejection-sample one slot's verify window.
+
+    ``vals`` (K+1, C) are raw logits over a candidate set whose global
+    token ids are ``ids`` (K+1, C) — the full vocabulary (``ids`` =
+    iota) on a single ring, or the all-gathered (tp x 64) top-k set
+    under tp.  Row i scores the token AFTER verify position i, i.e. the
+    row the engine would have sampled from had it fed ``draft[i-1]``
+    sequentially; ``draft`` (K,) are the proposed tokens for rows
+    0..K-1.
+
+    The drafter is deterministic, so its proposal q is one-hot at
+    ``draft[i]`` and Leviathan-style rejection sampling collapses to:
+    accept ``draft[i]`` with probability ``p_i(draft[i])`` (p_i =
+    softmax of the :func:`_filter_row`-filtered row), else resample from
+    p_i with the draft token masked out — which makes every emitted
+    token an EXACT draw from p_i regardless of what the drafter
+    proposed.  Greedy rows (``temp <= 0``) take the plain argmax and a
+    draft is "accepted" iff it equals it, so the greedy output equals
+    the sequential greedy stream bit for bit.  ``n_acc`` is the length
+    of the leading accepted run; the emitted tokens for the window are
+    ``out[0 .. n_acc]`` (accepted drafts + one resample/bonus token).
+    A draft token absent from the candidate set has p = 0 and is always
+    rejected, which keeps the tp form conservative, never wrong.
+
+    ``keys`` (K+1, 2) come from :func:`split_spec_rng_chain`; position i
+    derives its accept-uniform from ``fold_in(keys[i], 0)`` and its
+    resample/bonus categorical from ``fold_in(keys[i], 1)``, so fused
+    and host verify consume identical rng bits.
+    """
+    K = draft.shape[0]
+    lg = jax.vmap(lambda rw: _filter_row(rw, temp, top_k, top_p))(vals)
+    g_idx = jnp.argmax(vals, -1)
+    g_out = jnp.take_along_axis(ids, g_idx[:, None], 1)[:, 0]
+    probs = jax.nn.softmax(lg, -1)
+    is_d = ids[:K] == draft[:, None]
+    p_draft = jnp.sum(jnp.where(is_d, probs[:K], 0.0), -1)
+    u = jax.vmap(lambda kk: jax.random.uniform(
+        jax.random.fold_in(kk, 0)))(keys[:K])
+    acc = u < p_draft
+    lg_mask = jnp.where(is_d, -jnp.inf, lg[:K])
+    res_idx = jax.vmap(lambda l, kk: jax.random.categorical(
+        jax.random.fold_in(kk, 1), l))(lg_mask, keys[:K])
+    res = jnp.take_along_axis(ids[:K], res_idx[:, None], 1)[:, 0]
+    bonus_idx = jax.random.categorical(jax.random.fold_in(keys[K], 1),
+                                       lg[K])
+    bonus = ids[K, bonus_idx]
+    s_out = jnp.concatenate([jnp.where(acc, draft, res), bonus[None]])
+    greedy = temp <= 0.0
+    out = jnp.where(greedy, g_out, s_out).astype(jnp.int32)
+    match = jnp.where(greedy, g_out[:K] == draft, acc)
+    n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32)))
+    return out, n_acc.astype(jnp.int32)
+
+
+def spec_verify_rows(rows: jax.Array, draft: jax.Array, keys: jax.Array,
+                     temp: jax.Array, top_k: jax.Array, top_p: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """One slot's verify over FULL logits rows (K+1, V).
+
+    The host oracle: the engine's ``sampling="host"`` speculative path
+    reads the verify logits back and calls this per slot with the keys
+    from its sequential split chain — the same function the fused path
+    vmaps, so fused == host bit for bit by construction.
+    Returns ``(out (K+1,), n_acc)``.
+    """
+    K1, V = rows.shape
+    ids = jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32)[None], (K1, V))
+    return _verify_rows(rows.astype(jnp.float32), ids, draft, keys,
+                        temp, top_k, top_p)
+
+
+def speculative_verify_batched(logits: jax.Array, draft: jax.Array,
+                               rng: jax.Array, temps: jax.Array,
+                               top_ks: jax.Array, top_ps: jax.Array,
+                               active: Optional[jax.Array] = None
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused rejection sampling for one verify window.
+
+    ``logits`` (B, K+1, V) full rows, ``draft`` (B, K) proposed tokens.
+    Returns ``(out (B, K+1), n_acc (B,), rng')`` — slot b emits
+    ``out[b, 0 .. n_acc[b]]``.  Per-slot sampling params ride as device
+    arrays exactly like :func:`sample_batched`; greedy/idle slots
+    consume no rng.
+    """
+    B, K1, V = logits.shape
+    if active is None:
+        active = jnp.ones(temps.shape, bool)
+    stoch = active & (temps > 0.0)
+    rng, keys = split_spec_rng_chain(rng, stoch, K1)
+    ids = jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32)[None, None],
+                           (B, K1, V))
+    out, n_acc = jax.vmap(_verify_rows)(logits.astype(jnp.float32), ids,
+                                        draft, keys, temps, top_ks,
+                                        top_ps)
+    return out, n_acc, rng
+
+
+def speculative_verify_sharded(logits_loc: jax.Array, draft: jax.Array,
+                               rng: jax.Array, temps: jax.Array,
+                               top_ks: jax.Array, top_ps: jax.Array,
+                               active: Optional[jax.Array],
+                               axis_name: Optional[str], tp: int
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Ring form of :func:`speculative_verify_batched` for vocab-sharded
+    verify logits (B, K+1, V/tp), for use INSIDE ``shard_map``.
+
+    Mirrors :func:`sample_sharded_batched`: each rank pre-selects its
+    local top-``MAX_LOCAL_K`` per row, only the (tp x k) candidate set
+    is all-gathered, and the accept/resample draws run on that with
+    every rank consuming the identical rng chain — accepted prefixes and
+    resampled tokens come out replicated.  Greedy verification reduces
+    to argmax over the candidate set == the global argmax, so greedy
+    parity with tp=1 is exact; stochastic draws use the same candidate
+    -set approximation the non-speculative ring sampler already uses.
+    """
+    if axis_name is None or tp == 1:
+        return speculative_verify_batched(logits_loc, draft, rng, temps,
+                                          top_ks, top_ps, active)
+    if active is None:
+        active = jnp.ones(temps.shape, bool)
+    B, K1, v_loc = logits_loc.shape
+    k = min(MAX_LOCAL_K, v_loc)
+    vals, idx = lax.top_k(logits_loc.astype(jnp.float32), k)
+    r = lax.axis_index(axis_name)
+    gidx = idx + r * v_loc
+    vals_all = lax.all_gather(vals, axis_name, axis=2).reshape(
+        B, K1, tp * k)
+    gidx_all = lax.all_gather(gidx, axis_name, axis=2).reshape(
+        B, K1, tp * k)
+    stoch = active & (temps > 0.0)
+    rng, keys = split_spec_rng_chain(rng, stoch, K1)
+    out, n_acc = jax.vmap(_verify_rows)(vals_all, gidx_all, draft, keys,
+                                        temps, top_ks, top_ps)
+    return out, n_acc, rng
 
 
 def sample_sharded(logits_loc: jax.Array, rng: jax.Array,

@@ -331,7 +331,7 @@ class Scheduler:
             self._preempt(victim)
             preempted.append(victim)
 
-    def reserve_lookahead(self, steps: int) -> bool:
+    def reserve_lookahead(self, steps: int, draft_k: int = 0) -> bool:
         """All-or-nothing block reservation for a multi-step decode window.
 
         The engine's fused ``steps_per_sync`` window runs ``steps`` decode
@@ -343,6 +343,16 @@ class Scheduler:
         is allocated and the caller falls back to single-step dispatch
         (where the usual grow-or-preempt policy applies).
 
+        ``draft_k``: extra KV slots per sequence for a speculative
+        verify window — the window WRITES KV at positions
+        ``pos .. pos + steps + draft_k - 1`` (k drafts beyond the
+        committed token) before the host learns how many were accepted,
+        so an all-accept window landing at a block boundary would
+        otherwise scatter past the sequence's last block into the null
+        block and silently corrupt later reads.  Reserved-but-unused
+        blocks stay owned by the sequence and are freed at release, so
+        the pool accounting matches a non-speculative run after drain.
+
         Prefilling sequences are skipped: they sit out decode windows
         (frozen null-block rows), so reserving decode lookahead for
         them would only race :meth:`chunk_reserve` for the same blocks.
@@ -353,7 +363,7 @@ class Scheduler:
         for seq in self.active:
             if seq is None or seq.prefilling:
                 continue
-            target = min(seq.pos + steps, self.max_seq)
+            target = min(seq.pos + steps + draft_k, self.max_seq)
             short = blocks_for(target, self.pool.block_size) \
                 - len(seq.blocks)
             if short > 0:
