@@ -27,6 +27,7 @@ from repro.configs import get_config  # noqa: E402
 from repro.core.compat import make_mesh  # noqa: E402
 from repro.core.rings import reconfigure, submeshes  # noqa: E402
 from repro.models.registry import build_model  # noqa: E402
+from repro.serving.config import EngineConfig  # noqa: E402
 from repro.serving.engine import LPUEngine  # noqa: E402
 
 
@@ -40,7 +41,8 @@ def serve_on(mesh, arch: str):
     model = build_model(cfg, plan)
     params, _ = model.init(
         jax.random.PRNGKey(zlib.crc32(arch.encode()) % 2 ** 31))
-    eng = LPUEngine(model, params, slots=2, max_seq=32, mesh=mesh)
+    eng = LPUEngine(model, params, EngineConfig(slots=2, max_seq=32),
+                    mesh=mesh)
     outs = eng.generate([[1, 2, 3, 4], [5, 6, 7]], max_new_tokens=6)
     return outs, eng
 

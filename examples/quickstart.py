@@ -12,6 +12,7 @@ import jax  # noqa: E402
 from repro.compiler.mapper import plan_model, summarize  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.models.registry import build_model  # noqa: E402
+from repro.serving.config import EngineConfig  # noqa: E402
 from repro.serving.engine import LPUEngine  # noqa: E402
 from repro.serving.sampler import SamplingParams  # noqa: E402
 
@@ -31,7 +32,7 @@ def main():
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"model: {cfg.name}  ({n/1e6:.1f}M params reduced)")
 
-    engine = LPUEngine(model, params, slots=2, max_seq=64)
+    engine = LPUEngine(model, params, EngineConfig(slots=2, max_seq=64))
     prompts = [[1, 2, 3, 4], [10, 11, 12]]
 
     def stream(rid, tok):

@@ -18,6 +18,7 @@ import numpy as np  # noqa: E402
 from repro.compiler.mapper import plan_model  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.models.registry import build_model  # noqa: E402
+from repro.serving.config import EngineConfig  # noqa: E402
 from repro.serving.engine import LPUEngine  # noqa: E402
 from repro.serving.sampler import SamplingParams  # noqa: E402
 
@@ -30,6 +31,9 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--kv-dtype", default="auto",
+                    help="KV pool storage precision (e.g. int8: half "
+                         "the pool bytes, scales stored alongside)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -43,9 +47,11 @@ def main():
     # paged pool at ~half the dense capacity: requests share blocks on
     # demand instead of each slot pre-claiming max_seq tokens
     table_len = max_seq // args.block_size
-    engine = LPUEngine(model, params, slots=args.slots, max_seq=max_seq,
-                       paged=True, block_size=args.block_size,
-                       num_blocks=(args.slots * table_len) // 2 + 1)
+    engine = LPUEngine(model, params, EngineConfig(
+        slots=args.slots, max_seq=max_seq, paged=True,
+        block_size=args.block_size,
+        num_blocks=(args.slots * table_len) // 2 + 1,
+        kv_dtype=args.kv_dtype))
 
     rng = np.random.RandomState(0)
     prompts = [list(rng.randint(1, cfg.vocab_size,

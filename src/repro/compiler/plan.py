@@ -148,6 +148,71 @@ class MoEPlan:
     capacity_factor: float
 
 
+# itemsize table for storage dtypes numpy cannot name (jax fp8 types)
+_STORE_ITEMSIZE = {"float8_e4m3fn": 1}
+
+
+@dataclass(frozen=True)
+class KVPrecision:
+    """Resolved KV-pool storage precision (the engine's ``kv_dtype`` knob).
+
+    ``auto`` stores at ``plan.cache_dtype`` (today's path, bit-identical);
+    ``float16``/``bfloat16`` cast on store with no side arrays; ``int8``
+    and ``fp8`` store quantized values with a per-(token-row, kv-head)
+    absmax scale kept in a side array next to the pool — strictly
+    per-block scales are impossible with the decode path's incremental
+    row-at-a-time writes (rescaling a whole resident block per token
+    would re-read what paging exists to avoid), so the scale granularity
+    is one fp16 scalar per stored row per head.
+    """
+
+    requested: str                 # the knob value ("auto", "int8", ...)
+    store_dtype: str               # pool leaf dtype name
+    scale_dtype: Optional[str]     # side-array dtype; None = not quantized
+    qmax: float                    # symmetric clip bound (0 = not quantized)
+
+    @property
+    def quantized(self) -> bool:
+        return self.scale_dtype is not None
+
+    @property
+    def itemsize(self) -> int:
+        return _STORE_ITEMSIZE.get(self.store_dtype,
+                                   np.dtype(self.store_dtype).itemsize)
+
+    @property
+    def scale_itemsize(self) -> int:
+        return np.dtype(self.scale_dtype).itemsize if self.quantized else 0
+
+    def bytes_per_row_head(self, d_head: int) -> int:
+        """Stored bytes of one token's one kv head (values + its scale)."""
+        return d_head * self.itemsize + self.scale_itemsize
+
+
+def resolve_kv_precision(kv_dtype: str, cache_dtype: str) -> KVPrecision:
+    """Map the ``kv_dtype`` knob onto a :class:`KVPrecision`.
+
+    ``fp8`` resolves to ``float8_e4m3fn``; availability under the
+    session's jax pin is the caller's check (the serving layer gates on
+    ``hasattr(jnp, "float8_e4m3fn")`` and falls back loudly).
+    """
+    kd = (kv_dtype or "auto").lower()
+    if kd == "auto":
+        return KVPrecision("auto", cache_dtype, None, 0.0)
+    if kd in ("float16", "fp16"):
+        return KVPrecision("float16", "float16", None, 0.0)
+    if kd in ("bfloat16", "bf16"):
+        return KVPrecision("bfloat16", "bfloat16", None, 0.0)
+    if kd in ("float32", "fp32"):
+        return KVPrecision("float32", "float32", None, 0.0)
+    if kd == "int8":
+        return KVPrecision("int8", "int8", "float16", 127.0)
+    if kd in ("fp8", "float8_e4m3fn"):
+        return KVPrecision("fp8", "float8_e4m3fn", "float16", 448.0)
+    raise ValueError(f"unknown kv_dtype {kv_dtype!r} (expected auto, "
+                     "float16, bfloat16, float32, int8 or fp8)")
+
+
 @dataclass(frozen=True)
 class PhysicalPlan:
     arch: str

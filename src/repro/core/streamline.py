@@ -30,14 +30,24 @@ import jax.numpy as jnp
 from repro.kernels.decode_attention.ops import (decode_attention,
                                                 paged_decode_attention,
                                                 resolve_paged_kernel)
-from repro.kernels.gemv.ops import gemv
+from repro.kernels.gemv.ops import gemv, quantize_weight
 from repro.models.common import apply_norm, apply_rope
 
 Params = Dict[str, jax.Array]
 
+W_DTYPES = ("auto", "int8")
+
 
 def _mm(x2d: jax.Array, w: jax.Array, b: Optional[jax.Array], *,
-        use_kernels: bool, interpret: bool = True) -> jax.Array:
+        use_kernels: bool, interpret: bool = True,
+        quantize: bool = False) -> jax.Array:
+    if quantize:
+        # int8 weight stream: per-output-column absmax quantization, the
+        # scale applied once at the kernel's f32 flush — halves the HBM
+        # bytes of the dominant weight stream (C1's balance knob)
+        qw, ws = quantize_weight(w)
+        return gemv(x2d, qw, b, w_scale=ws, use_pallas=use_kernels,
+                    interpret=interpret)
     return gemv(x2d, w, b, use_pallas=use_kernels, interpret=interpret)
 
 
@@ -45,7 +55,8 @@ def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
                  positions: jax.Array, *, cfg, plan,
                  use_kernels: bool = True, interpret: bool = True,
                  block_table: Optional[jax.Array] = None,
-                 paged_kernel: str = "auto"
+                 paged_kernel: str = "auto",
+                 w_dtype: str = "auto"
                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decoder layer, one token, single device (tp folded outside).
 
@@ -62,7 +73,17 @@ def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
     ``"gather"`` materializes the per-request contiguous view first (the
     reference oracle); ``"auto"`` streams when the stored GQA layout is
     block-regular.
+
+    Quantized pool (``k_scale``/``v_scale`` leaves present): the new
+    token's KV rows quantize at scatter time and the kernel dequantizes
+    in its tile loop — the decode chain reads the pool post-update, so
+    the current token is attended via its quantized round-trip (same
+    stored-value contract as the full model path).  ``w_dtype="int8"``
+    streams every gemv's weights int8 with per-output-column scales.
     """
+    if w_dtype not in W_DTYPES:
+        raise ValueError(f"w_dtype={w_dtype!r} not in {W_DTYPES}")
+    qw = w_dtype == "int8"
     a = plan.attn
     B, D = x.shape
     qpr, kpr, dh = a.q_per_rank, a.kv_per_rank, a.d_head
@@ -76,7 +97,8 @@ def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
     if "bq" in p["attn"]:
         bqkv = jnp.concatenate([p["attn"][k].reshape(-1)
                                 for k in ("bq", "bk", "bv")])
-    qkv = _mm(h, wqkv, bqkv, use_kernels=use_kernels, interpret=interpret)
+    qkv = _mm(h, wqkv, bqkv, use_kernels=use_kernels, interpret=interpret,
+              quantize=qw)
     q, k_new, v_new = jnp.split(qkv, [qpr * dh, (qpr + kpr) * dh], -1)
     q = q.reshape(B, qpr, dh)
     k_new = k_new.reshape(B, kpr, dh)
@@ -87,6 +109,8 @@ def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
         k_new = apply_rope(k_new[:, None], positions[:, None],
                            cfg.rope_theta)[:, 0]
 
+    quantized = block_table is not None and "k_scale" in cache
+    ks = vs = None
     if block_table is not None:
         # pool scatter: one (G, dh) row per sequence; inactive slots all
         # target the null block 0 (don't-care, masked by valid length)
@@ -95,8 +119,19 @@ def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
                                   (positions // bs_blk)[:, None],
                                   axis=1)[:, 0]
         off = positions % bs_blk
-        kc = cache["k"].at[blk, off].set(k_new.astype(cache["k"].dtype))
-        vc = cache["v"].at[blk, off].set(v_new.astype(cache["v"].dtype))
+        if quantized:
+            from repro.serving.kv_cache import quantize_kv_rows
+            kq, ksc = quantize_kv_rows(k_new, cache["k"].dtype,
+                                       cache["k_scale"].dtype)
+            vq, vsc = quantize_kv_rows(v_new, cache["v"].dtype,
+                                       cache["v_scale"].dtype)
+            kc = cache["k"].at[blk, off].set(kq)
+            vc = cache["v"].at[blk, off].set(vq)
+            ks = cache["k_scale"].at[blk, off].set(ksc)
+            vs = cache["v_scale"].at[blk, off].set(vsc)
+        else:
+            kc = cache["k"].at[blk, off].set(k_new.astype(cache["k"].dtype))
+            vc = cache["v"].at[blk, off].set(v_new.astype(cache["v"].dtype))
         mode = resolve_paged_kernel(plan, bs_blk, paged_kernel,
                                     interpret=interpret)
         if mode == "stream":
@@ -105,12 +140,18 @@ def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
             # materializes a per-request contiguous copy
             attn = paged_decode_attention(
                 q, kc, vc, block_table, positions + 1,
+                k_scale=ks, v_scale=vs,
                 use_pallas=use_kernels, interpret=interpret)
             attn_done = True
         else:
             T = block_table.shape[1]
             k_view = kc[block_table].reshape(B, T * bs_blk, *kc.shape[2:])
             v_view = vc[block_table].reshape(B, T * bs_blk, *vc.shape[2:])
+            if quantized:
+                k_view = k_view.astype(jnp.float32) * ks[
+                    block_table].reshape(B, T * bs_blk, kpr)[..., None]
+                v_view = v_view.astype(jnp.float32) * vs[
+                    block_table].reshape(B, T * bs_blk, kpr)[..., None]
             attn_done = False
     else:
         def upd(c, n, pos):
@@ -126,23 +167,27 @@ def decode_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
                                 use_pallas=use_kernels, interpret=interpret)
     wo = p["attn"]["wo"].reshape(qpr * dh, D)
     x = x + _mm(attn.reshape(B, -1), wo, None, use_kernels=use_kernels,
-                interpret=interpret)
+                interpret=interpret, quantize=qw)
 
     h = apply_norm(p["ln2"], x, cfg.norm)
     if "wg" in p["mlp"]:
         w1 = jnp.concatenate([p["mlp"]["wg"], p["mlp"]["wu"]], -1)
-        gu = _mm(h, w1, None, use_kernels=use_kernels, interpret=interpret)
+        gu = _mm(h, w1, None, use_kernels=use_kernels, interpret=interpret,
+                 quantize=qw)
         g, u = jnp.split(gu, 2, -1)
         act = jax.nn.silu(g) * u if cfg.activation == "silu" else \
             jax.nn.gelu(g) * u
     else:
         act = _mm(h, p["mlp"]["wi"], p["mlp"].get("bi"),
-                  use_kernels=use_kernels, interpret=interpret)
+                  use_kernels=use_kernels, interpret=interpret, quantize=qw)
         act = jax.nn.relu(act) if cfg.activation == "relu" else \
             jax.nn.gelu(act)
     y = _mm(act, p["mlp"]["wd"], p["mlp"].get("bd"),
-            use_kernels=use_kernels, interpret=interpret)
-    return x + y, {"k": kc, "v": vc}
+            use_kernels=use_kernels, interpret=interpret, quantize=qw)
+    new_cache = {"k": kc, "v": vc}
+    if quantized:
+        new_cache["k_scale"], new_cache["v_scale"] = ks, vs
+    return x + y, new_cache
 
 
 def chunk_prefill_layer(p: Params, x: jax.Array,
@@ -243,7 +288,7 @@ def chunk_prefill_layer(p: Params, x: jax.Array,
 def verify_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
                  block_tables: jax.Array, positions: jax.Array, *, cfg,
                  plan, use_kernels: bool = True, interpret: bool = True,
-                 paged_kernel: str = "auto"
+                 paged_kernel: str = "auto", w_dtype: str = "auto"
                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decoder layer over one speculative verify window.
 
@@ -262,7 +307,7 @@ def verify_layer(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
     return decode_layer(p, x, cache, positions, cfg=cfg, plan=plan,
                         use_kernels=use_kernels, interpret=interpret,
                         block_table=block_tables,
-                        paged_kernel=paged_kernel)
+                        paged_kernel=paged_kernel, w_dtype=w_dtype)
 
 
 def stream_bytes_per_layer(cfg, plan, kv_len: int) -> int:

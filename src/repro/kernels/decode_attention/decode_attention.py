@@ -61,7 +61,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, *rest,
-                         t_blocks: int, block_s: int, scale: float):
+                         t_blocks: int, block_s: int, scale: float,
+                         quantized: bool = False):
     """Paged variant: same online-softmax stream as ``_decode_kernel`` but
     KV tiles are fetched through the block table (scalar-prefetched, so the
     DMA address is known before the body runs — the LPU's address-generator
@@ -71,7 +72,18 @@ def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, *rest,
     is read *pre-update*), the just-generated token's K/V is folded into
     the online-softmax carry after the last pool tile — the model path's
     read-then-scatter contract, so the pool is never copied to append one
-    row."""
+    row.
+
+    ``quantized``: the pool tiles are int8/fp8 and ``ks_ref/vs_ref``
+    carry one absmax scale per (row, kv head); dequantization happens
+    HERE, inside the tile loop right after the VMEM load, so fp KV
+    values never round-trip through HBM — the stream stays at the
+    quantized byte width end to end.  The folded new token's K/V stays
+    full precision (it is a fresh activation, not pool storage)."""
+    rest = list(rest)
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]
+        rest = rest[2:]
     fold_new = len(rest) == 6
     if fold_new:
         kn_ref, vn_ref, o_ref, m_ref, l_ref, acc_ref = rest
@@ -89,6 +101,9 @@ def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, *rest,
     q = q_ref[0].astype(jnp.float32) * scale            # (gs, dh)
     k = k_ref[0, :, 0].astype(jnp.float32)              # (block_s, dh)
     v = v_ref[0, :, 0].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+        v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
     length = len_ref[b]
@@ -130,6 +145,8 @@ def paged_decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
                                   lengths: jax.Array, *,
                                   k_new: jax.Array = None,
                                   v_new: jax.Array = None,
+                                  k_scale: jax.Array = None,
+                                  v_scale: jax.Array = None,
                                   interpret: bool = True) -> jax.Array:
     """q: (B,H,dh); k_pages,v_pages: (N,bs,G,dh) shared pool with H = G*gs;
     block_tables: (B,T) physical block per logical block; lengths: (B,).
@@ -139,17 +156,24 @@ def paged_decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
     ``k_new/v_new`` ((B,G,dh), both or neither): the current token's K/V,
     folded into the softmax carry *after* the streamed pool tiles — used
     by the decode path that reads the cache pre-update and lets the
-    caller scatter the new row into the pool afterwards."""
+    caller scatter the new row into the pool afterwards.
+
+    ``k_scale/v_scale`` ((N,bs,G), both or neither): the quantized
+    pool's absmax scale side-arrays; their tiles ride the SAME
+    block-table indirection as the value tiles and dequantization runs
+    inside the tile loop."""
     B, H, dh = q.shape
     N, bs, G, _ = k_pages.shape
     T = block_tables.shape[1]
     assert H % G == 0, (H, G)
     assert (k_new is None) == (v_new is None)
+    assert (k_scale is None) == (v_scale is None)
     gs = H // G
     qg = q.reshape(B * G, gs, dh)
 
     kernel = functools.partial(_paged_decode_kernel, t_blocks=T, block_s=bs,
-                               scale=1.0 / math.sqrt(dh))
+                               scale=1.0 / math.sqrt(dh),
+                               quantized=k_scale is not None)
     in_specs = [
         pl.BlockSpec((1, gs, dh),
                      lambda b, g, t, lens, tbl: (b * G + g, 0, 0)),
@@ -159,6 +183,11 @@ def paged_decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
                      lambda b, g, t, lens, tbl: (tbl[b, t], 0, g, 0)),
     ]
     operands = [lengths, block_tables, qg, k_pages, v_pages]
+    if k_scale is not None:
+        scale_spec = pl.BlockSpec(
+            (1, bs, 1), lambda b, g, t, lens, tbl: (tbl[b, t], 0, g))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     if k_new is not None:
         new_spec = pl.BlockSpec((1, 1, dh),
                                 lambda b, g, t, lens, tbl: (b * G + g, 0, 0))

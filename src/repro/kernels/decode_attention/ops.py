@@ -138,6 +138,8 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            lengths: jax.Array, *,
                            k_new: Optional[jax.Array] = None,
                            v_new: Optional[jax.Array] = None,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
                            use_pallas: bool = True,
                            interpret: bool = True) -> jax.Array:
     """Paged decode attention over a shared block pool.
@@ -153,16 +155,26 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     never rewrites (or copies) the pool to append one token.  The LANE
     alignment guard only applies to compiled TPU tiles; interpret mode
     (CPU CI) streams any block size.
+
+    ``k_scale/v_scale`` ((N,bs,G)): absmax scale side-arrays of a
+    quantized (int8/fp8) pool.  The stream path dequantizes inside the
+    kernel's tile loop; the gather-oracle path dequantizes the gathered
+    view — both read the pool at the quantized byte width.
     """
     B, H, dh = q.shape
     bs, G = k_pages.shape[1], k_pages.shape[2]
     misaligned = (bs % LANE or dh % LANE) and not interpret
     if (not use_pallas) or H % G or misaligned:
         gs = max(H // G, 1)
-        ke = jnp.repeat(gather_kv_pages(k_pages, block_tables), gs,
-                        axis=2)[:, :, :H]
-        ve = jnp.repeat(gather_kv_pages(v_pages, block_tables), gs,
-                        axis=2)[:, :, :H]
+        kg = gather_kv_pages(k_pages, block_tables)
+        vg = gather_kv_pages(v_pages, block_tables)
+        if k_scale is not None:
+            kg = kg.astype(jnp.float32) * gather_kv_pages(
+                k_scale, block_tables).astype(jnp.float32)[..., None]
+            vg = vg.astype(jnp.float32) * gather_kv_pages(
+                v_scale, block_tables).astype(jnp.float32)[..., None]
+        ke = jnp.repeat(kg, gs, axis=2)[:, :, :H]
+        ve = jnp.repeat(vg, gs, axis=2)[:, :, :H]
         if k_new is not None:
             # oracle fold: mask-scatter the new token at its position in
             # the gathered view, extend the valid length by one
@@ -178,4 +190,5 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
         return decode_attention_ref(q, ke, ve, lengths)
     return paged_decode_attention_pallas(q, k_pages, v_pages, block_tables,
                                          lengths, k_new=k_new, v_new=v_new,
+                                         k_scale=k_scale, v_scale=v_scale,
                                          interpret=interpret)

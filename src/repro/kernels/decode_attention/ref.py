@@ -23,14 +23,24 @@ def gather_kv_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
 
 def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
                                v_pages: jax.Array, block_tables: jax.Array,
-                               lengths: jax.Array) -> jax.Array:
+                               lengths: jax.Array, *,
+                               k_scale: jax.Array | None = None,
+                               v_scale: jax.Array | None = None
+                               ) -> jax.Array:
     """Oracle paged decode attention: gather blocks, run the dense oracle.
 
     q: (B,H,dh); k_pages,v_pages: (N,bs,H,dh) (head count already expanded
     to H like ``decode_attention_ref``); block_tables: (B,T); lengths: (B,).
+    ``k_scale/v_scale`` ((N,bs,H)) dequantize a quantized pool's gathered
+    view before the dense oracle runs.
     """
     k = gather_kv_pages(k_pages, block_tables)
     v = gather_kv_pages(v_pages, block_tables)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * gather_kv_pages(
+            k_scale, block_tables).astype(jnp.float32)[..., None]
+        v = v.astype(jnp.float32) * gather_kv_pages(
+            v_scale, block_tables).astype(jnp.float32)[..., None]
     return decode_attention_ref(q, k, v, lengths)
 
 

@@ -1,4 +1,4 @@
-from repro.kernels.gemv.ops import gemv
+from repro.kernels.gemv.ops import gemv, plan_blocks, quantize_weight
 from repro.kernels.gemv.ref import gemv_ref
 
-__all__ = ["gemv", "gemv_ref"]
+__all__ = ["gemv", "gemv_ref", "plan_blocks", "quantize_weight"]

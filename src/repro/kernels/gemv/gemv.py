@@ -25,8 +25,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gemv_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_tiles: int,
-                 has_bias: bool):
+def _gemv_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *,
+                 k_tiles: int, has_bias: bool, has_scale: bool):
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -42,17 +42,25 @@ def _gemv_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_tiles: int,
     @pl.when(k == k_tiles - 1)
     def _flush():
         acc = acc_ref[...]
+        if has_scale:
+            # int8 weight tiles: one absmax scale per output column,
+            # applied ONCE at the f32 flush (before the fp bias) so the
+            # stream stays quantized end to end
+            acc = acc * s_ref[...].astype(jnp.float32)
         if has_bias:
             acc = acc + b_ref[...].astype(jnp.float32)
         o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def gemv_pallas(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
+                w_scale: jax.Array | None = None,
                 block_n: int = 512, block_k: int = 512,
                 interpret: bool = True) -> jax.Array:
     """x: (B, K); w: (K, N); optional b: (N,) -> (B, N).
 
     B (decode batch per device) stays whole — it is tiny by design.
+    ``w_scale`` (N,) marks ``w`` as int8 per-output-column quantized;
+    the scale tile rides the same (1, N_blk) window as the bias.
     """
     B, K = x.shape
     K2, N = w.shape
@@ -63,12 +71,15 @@ def gemv_pallas(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
     k_tiles = K // block_k
     n_tiles = N // block_n
     has_bias = b is not None
+    has_scale = w_scale is not None
     if b is None:
         b = jnp.zeros((N,), x.dtype)
     b2 = b.reshape(1, N)
+    s2 = (w_scale if w_scale is not None
+          else jnp.ones((N,), jnp.float32)).reshape(1, N)
 
     kernel = functools.partial(_gemv_kernel, k_tiles=k_tiles,
-                               has_bias=has_bias)
+                               has_bias=has_bias, has_scale=has_scale)
     return pl.pallas_call(
         kernel,
         grid=(n_tiles, k_tiles),
@@ -76,9 +87,10 @@ def gemv_pallas(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
             pl.BlockSpec((B, block_k), lambda n, k: (0, k)),
             pl.BlockSpec((block_k, block_n), lambda n, k: (k, n)),
             pl.BlockSpec((1, block_n), lambda n, k: (0, n)),
+            pl.BlockSpec((1, block_n), lambda n, k: (0, n)),
         ],
         out_specs=pl.BlockSpec((B, block_n), lambda n, k: (0, n)),
         out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((B, block_n), jnp.float32)],
         interpret=interpret,
-    )(x, w, b2)
+    )(x, w, b2, s2)

@@ -6,13 +6,18 @@ import jax.numpy as jnp
 
 
 def gemv_ref(x: jax.Array, w: jax.Array,
-             b: jax.Array | None = None) -> jax.Array:
+             b: jax.Array | None = None, *,
+             w_scale: jax.Array | None = None) -> jax.Array:
     """x: (B, K) activation vectors; w: (K, N) streamed weights.
 
     f32 accumulation, output in x.dtype — matches the kernel contract.
+    ``w_scale`` (N,) dequantizes int8 weights at the accumulator, the
+    same order of operations as the kernel's flush (scale, then bias).
     """
     y = jnp.einsum("bk,kn->bn", x.astype(jnp.float32),
                    w.astype(jnp.float32))
+    if w_scale is not None:
+        y = y * w_scale.astype(jnp.float32)[None, :]
     if b is not None:
         y = y + b.astype(jnp.float32)
     return y.astype(x.dtype)

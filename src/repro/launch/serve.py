@@ -38,6 +38,13 @@ verify pass scores them against the pool, and rejection sampling
 accepts a prefix — greedy streams bit-identical, stochastic streams
 exactly target-distributed; ``model`` drafts with a reduced smollm-135m
 running greedily at batch 1).
+
+Precision knobs: ``--kv-dtype {auto,float16,bfloat16,float32,int8,fp8}``
+(KV pool storage precision — int8/fp8 store per-(row, head) absmax
+scales beside the pool and dequantize inside the paged kernel's tile
+loop, halving the KV stream's HBM bytes) and ``--w-dtype {auto,int8}``
+(streamed weight precision of the gemv chain).  See docs/serving.md
+"KV & weight precision".
 """
 from __future__ import annotations
 
@@ -55,6 +62,7 @@ from repro.compiler.mapper import plan_model  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.launch.mesh import make_serving_mesh  # noqa: E402
 from repro.models.registry import build_model  # noqa: E402
+from repro.serving.config import EngineConfig  # noqa: E402
 from repro.serving.engine import LPUEngine, MultiRingEngine  # noqa: E402
 from repro.serving.sampler import SamplingParams  # noqa: E402
 
@@ -124,6 +132,17 @@ def main():
                          "accept a rejection-sampled prefix (paged only)")
     ap.add_argument("--draft-k", type=int, default=4,
                     help="draft tokens proposed per speculative round")
+    ap.add_argument("--kv-dtype", default="auto",
+                    choices=("auto", "float16", "bfloat16", "float32",
+                             "int8", "fp8"),
+                    help="KV pool storage precision: fp dtypes restore "
+                         "the pool; int8/fp8 quantize per-(row, head) "
+                         "with absmax scales dequantized in-kernel "
+                         "(paged only; auto = the plan's cache dtype)")
+    ap.add_argument("--w-dtype", default="auto",
+                    choices=("auto", "int8"),
+                    help="streamed weight precision of the gemv chain "
+                         "(int8 with per-output-column scales)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -153,26 +172,29 @@ def main():
                            param_dtype="float32")
         draft_model = build_model(dcfg, dplan)
         draft_params, _ = draft_model.init(jax.random.PRNGKey(1))
-    engine_kw = dict(slots=args.slots, max_seq=args.max_seq,
-                     paged=False if args.dense else None,
-                     block_size=args.block_size,
-                     num_blocks=args.num_blocks,
-                     kv_budget_bytes=args.kv_budget_mb << 20,
-                     min_bucket=args.min_bucket,
-                     paged_kernel=args.paged_kernel,
-                     sampling=args.sampling,
-                     steps_per_sync=args.steps_per_sync,
-                     block_s=args.block_s,
-                     prefill_chunk=args.prefill_chunk,
-                     prefix_cache=args.prefix_cache == "on",
-                     speculate=args.speculate, draft_k=args.draft_k,
-                     draft_model=draft_model, draft_params=draft_params)
+    econf = EngineConfig(slots=args.slots, max_seq=args.max_seq,
+                         paged=False if args.dense else None,
+                         block_size=args.block_size,
+                         num_blocks=args.num_blocks,
+                         kv_budget_bytes=args.kv_budget_mb << 20,
+                         min_bucket=args.min_bucket,
+                         paged_kernel=args.paged_kernel,
+                         sampling=args.sampling,
+                         steps_per_sync=args.steps_per_sync,
+                         block_s=args.block_s,
+                         prefill_chunk=args.prefill_chunk,
+                         prefix_cache=args.prefix_cache == "on",
+                         speculate=args.speculate, draft_k=args.draft_k,
+                         kv_dtype=args.kv_dtype, w_dtype=args.w_dtype)
     if rings > 1:
         engine = MultiRingEngine(model, params, mesh, ring_size=tp,
-                                 **engine_kw)
+                                 config=econf, draft_model=draft_model,
+                                 draft_params=draft_params)
         first = engine.engines[0]
     else:
-        engine = LPUEngine(model, params, mesh=mesh, **engine_kw)
+        engine = LPUEngine(model, params, econf, mesh=mesh,
+                           draft_model=draft_model,
+                           draft_params=draft_params)
         first = engine
 
     rng = np.random.RandomState(0)
@@ -200,9 +222,11 @@ def main():
         print(f"[serve] {len(outs)} requests, {st.tokens} tokens, "
               f"{st.tokens_per_s:.1f} tok/s, occupancy {st.occupancy:.2f}, "
               f"{st.steps} decode steps, tp={tp}")
-        print(f"[serve] kv={mode} bytes={first.kv_cache_bytes()} "
+        print(f"[serve] kv={mode} dtype={first.kv_dtype} "
+              f"w_dtype={first.w_dtype} bytes={first.kv_cache_bytes()} "
               f"(per-rank {first.per_rank_kv_bytes()}, "
               f"dense-equiv {first.dense_equiv_bytes()}), "
+              f"kv_moved/step={first.kv_bytes_moved_per_step()}, "
               f"prefill traces={st.prefill_traces}, "
               f"preemptions={st.preemptions}")
         print(f"[serve] sampling={first.sampling} "

@@ -310,7 +310,7 @@ def chunk_prefill_attention(p: Params, x: jax.Array, *, cfg, plan,
     full updated pool as the new cache — the scan carry aliases it in
     place, so per chunk only the C new rows are written.
     """
-    from repro.serving.kv_cache import scatter_chunk_rows
+    from repro.serving.kv_cache import quantize_kv_rows, scatter_chunk_rows
     a = plan.attn
     q, k, v = qkv_proj(p, x, env, plan)
     if cfg.positional == "rope":
@@ -319,10 +319,27 @@ def chunk_prefill_attention(p: Params, x: jax.Array, *, cfg, plan,
     table = block_table[0]
     pos = positions[0]
     valid = pos < kv_valid_len
-    kc = scatter_chunk_rows(cache["k"], k[0], table, pos, valid)
-    vc = scatter_chunk_rows(cache["v"], v[0], table, pos, valid)
+    quantized = "k_scale" in cache
+    ks = vs = None
+    if quantized:
+        # quantize at pool-write time; the chunk's own rows are read
+        # back dequantized (post-update-read contract), so every later
+        # mode sees the SAME stored values this chunk attended
+        kq, ksc = quantize_kv_rows(k[0], cache["k"].dtype,
+                                   cache["k_scale"].dtype)
+        vq, vsc = quantize_kv_rows(v[0], cache["v"].dtype,
+                                   cache["v_scale"].dtype)
+        kc = scatter_chunk_rows(cache["k"], kq, table, pos, valid)
+        vc = scatter_chunk_rows(cache["v"], vq, table, pos, valid)
+        ks = scatter_chunk_rows(cache["k_scale"], ksc, table, pos, valid)
+        vs = scatter_chunk_rows(cache["v_scale"], vsc, table, pos, valid)
+    else:
+        kc = scatter_chunk_rows(cache["k"], k[0], table, pos, valid)
+        vc = scatter_chunk_rows(cache["v"], v[0], table, pos, valid)
     new_cache = dict(cache)
     new_cache["k"], new_cache["v"] = kc, vc
+    if quantized:
+        new_cache["k_scale"], new_cache["v_scale"] = ks, vs
 
     C = q.shape[1]
     bs = kc.shape[1]
@@ -332,12 +349,18 @@ def chunk_prefill_attention(p: Params, x: jax.Array, *, cfg, plan,
         lens = jnp.minimum(pos + 1, kv_valid_len)
         tabs = jnp.broadcast_to(table[None], (C, table.shape[0]))
         out = paged_decode_attention(
-            q[0], kc, vc, tabs, lens, use_pallas=True,
+            q[0], kc, vc, tabs, lens, k_scale=ks, v_scale=vs,
+            use_pallas=True,
             interpret=da_ops.default_interpret())[None]
     else:
         T = table.shape[0]
         kview = kc[table].reshape(1, T * bs, kc.shape[2], kc.shape[3])
         vview = vc[table].reshape(1, T * bs, vc.shape[2], vc.shape[3])
+        if quantized:
+            kview = kview.astype(jnp.float32) * \
+                ks[table].reshape(1, T * bs, ks.shape[2])[..., None]
+            vview = vview.astype(jnp.float32) * \
+                vs[table].reshape(1, T * bs, vs.shape[2])[..., None]
         kmap = local_kmap(plan, env)
         ke = _expand_kv(kview, kmap, a.q_per_rank)
         ve = _expand_kv(vview, kmap, a.q_per_rank)
@@ -377,7 +400,7 @@ def verify_attention(p: Params, x: jax.Array, *, cfg, plan,
     no undo: their rows land past the accepted resident length, stay
     masked, and are overwritten idempotently by later windows.
     """
-    from repro.serving.kv_cache import scatter_spec_rows
+    from repro.serving.kv_cache import quantize_kv_rows, scatter_spec_rows
     a = plan.attn
     q, k, v = qkv_proj(p, x, env, plan)
     if cfg.positional == "rope":
@@ -386,16 +409,33 @@ def verify_attention(p: Params, x: jax.Array, *, cfg, plan,
     pos = positions[0]
     lens = kv_valid_len
     valid = lens > pos
-    kc = scatter_spec_rows(cache["k"], k[0], block_tables, pos, valid)
-    vc = scatter_spec_rows(cache["v"], v[0], block_tables, pos, valid)
+    quantized = "k_scale" in cache
+    ks = vs = None
+    if quantized:
+        kq, ksc = quantize_kv_rows(k[0], cache["k"].dtype,
+                                   cache["k_scale"].dtype)
+        vq, vsc = quantize_kv_rows(v[0], cache["v"].dtype,
+                                   cache["v_scale"].dtype)
+        kc = scatter_spec_rows(cache["k"], kq, block_tables, pos, valid)
+        vc = scatter_spec_rows(cache["v"], vq, block_tables, pos, valid)
+        ks = scatter_spec_rows(cache["k_scale"], ksc, block_tables, pos,
+                               valid)
+        vs = scatter_spec_rows(cache["v_scale"], vsc, block_tables, pos,
+                               valid)
+    else:
+        kc = scatter_spec_rows(cache["k"], k[0], block_tables, pos, valid)
+        vc = scatter_spec_rows(cache["v"], v[0], block_tables, pos, valid)
     new_cache = dict(cache)
     new_cache["k"], new_cache["v"] = kc, vc
+    if quantized:
+        new_cache["k_scale"], new_cache["v_scale"] = ks, vs
 
     bs = kc.shape[1]
     mode = resolve_paged_kernel(plan, bs, paged_kernel)
     if mode == "stream":
         out = paged_decode_attention(
-            q[0], kc, vc, block_tables, lens, use_pallas=True,
+            q[0], kc, vc, block_tables, lens, k_scale=ks, v_scale=vs,
+            use_pallas=True,
             interpret=da_ops.default_interpret())[None]
     else:
         Q, T = block_tables.shape
@@ -403,6 +443,11 @@ def verify_attention(p: Params, x: jax.Array, *, cfg, plan,
                                          kc.shape[3])
         vview = vc[block_tables].reshape(Q, T * bs, vc.shape[2],
                                          vc.shape[3])
+        if quantized:
+            kview = kview.astype(jnp.float32) * \
+                ks[block_tables].reshape(Q, T * bs, ks.shape[2])[..., None]
+            vview = vview.astype(jnp.float32) * \
+                vs[block_tables].reshape(Q, T * bs, vs.shape[2])[..., None]
         kmap = local_kmap(plan, env)
         ke = _expand_kv(kview, kmap, a.q_per_rank)
         ve = _expand_kv(vview, kmap, a.q_per_rank)
@@ -464,21 +509,53 @@ def decode_attention(p: Params, x: jax.Array, *, cfg, plan, env: AxisEnv,
         assert env.kv_seq_axis is None, \
             "paged KV shards heads over the model ring, not the seq axis"
         mode = resolve_paged_kernel(plan, kc.shape[1], paged_kernel)
-        if mode == "stream":
-            out = paged_decode_attention(
-                q[:, 0], kc, vc, block_table, positions,
-                k_new=k_new[:, 0], v_new=v_new[:, 0],
-                use_pallas=True,
-                interpret=da_ops.default_interpret())[:, None]
+        quantized = "k_scale" in cache
+        if quantized:
+            from repro.serving.kv_cache import (dequantize_kv,
+                                                quantize_kv_rows)
+            # quantize FIRST, attend the dequantized round-trip: decode
+            # must see the exact value the pool will store, or later
+            # reads of this row (verify windows, chunked prefill) would
+            # diverge from the step that emitted it
+            kq, ksc = quantize_kv_rows(k_new, kc.dtype,
+                                       cache["k_scale"].dtype)
+            vq, vsc = quantize_kv_rows(v_new, vc.dtype,
+                                       cache["v_scale"].dtype)
+            k_fold, v_fold = dequantize_kv(kq, ksc), dequantize_kv(vq, vsc)
+            updates = {"k_new": kq, "v_new": vq,
+                       "k_scale_new": ksc, "v_scale_new": vsc,
+                       "pos": positions,
+                       "mask": jnp.ones(positions.shape, bool)}
+        else:
+            k_fold, v_fold = k_new, v_new
             updates = {"k_new": k_new.astype(kc.dtype),
                        "v_new": v_new.astype(vc.dtype),
                        "pos": positions,
                        "mask": jnp.ones(positions.shape, bool)}
+        if mode == "stream":
+            out = paged_decode_attention(
+                q[:, 0], kc, vc, block_table, positions,
+                k_new=k_fold[:, 0], v_new=v_fold[:, 0],
+                k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
+                use_pallas=True,
+                interpret=da_ops.default_interpret())[:, None]
             return out_proj(p, out, env, plan), updates
         B, T = block_table.shape
         bs = kc.shape[1]
         kc = kc[block_table].reshape(B, T * bs, kc.shape[2], kc.shape[3])
         vc = vc[block_table].reshape(B, T * bs, vc.shape[2], vc.shape[3])
+        if quantized:
+            G = cache["k_scale"].shape[2]
+            kc = kc.astype(jnp.float32) * cache["k_scale"][
+                block_table].reshape(B, T * bs, G)[..., None]
+            vc = vc.astype(jnp.float32) * cache["v_scale"][
+                block_table].reshape(B, T * bs, G)[..., None]
+        kmap = local_kmap(plan, env)
+        out = _flash_decode_chunked(q, kc, vc, kmap,
+                                    kv_valid_len=positions,
+                                    chunk=block_s or 2048,
+                                    k_new=k_fold, v_new=v_fold)
+        return out_proj(p, out, env, plan), updates
     if env.kv_seq_axis is None:
         # read the cache pre-update; the new token folds into the online
         # softmax and the caller scatters (k_new, v_new) into the scan
@@ -711,7 +788,7 @@ def _seq_sharded_decode(q, kc, vc, k_new, v_new, positions, plan,
 def init_cache(plan, batch: int, max_seq: int, dtype=jnp.bfloat16,
                abstract: bool = False, kv_seq_width: int = 1,
                paged: bool = False, num_blocks: int = 0,
-               block_size: int = 0):
+               block_size: int = 0, scale_dtype=None):
     """Per-layer KV cache in the stored (local-head) layout.
 
     Dense: global logical shape (B, max_seq, Gp, dh); under kv-seq
@@ -722,6 +799,12 @@ def init_cache(plan, batch: int, max_seq: int, dtype=jnp.bfloat16,
     dh) with **no batch dimension** — requests own disjoint block sets
     via block tables (block 0 reserved as the null block).  Memory
     scales with resident tokens, not slots x worst-case length.
+
+    ``scale_dtype`` (paged only) marks the pool as quantized: ``dtype``
+    is the int8/fp8 storage type and two scale side-arrays
+    ``k_scale``/``v_scale`` of shape (num_blocks, block_size, Gp) ride
+    alongside the values — one absmax scale per stored row per head,
+    zero-initialized so the null block dequantizes to exact zeros.
     """
     a = plan.attn
     gp = a.gp
@@ -730,10 +813,19 @@ def init_cache(plan, batch: int, max_seq: int, dtype=jnp.bfloat16,
         assert num_blocks >= 2 and block_size > 0, (num_blocks, block_size)
         shape = (num_blocks, block_size, gp, a.d_head)
     else:
+        assert scale_dtype is None, \
+            "quantized KV storage needs the paged pool (row scatters " \
+            "carry the scales; the dense cache has no side arrays)"
         s = max_seq // kv_seq_width
         shape = (batch, max_seq, gp, a.d_head) if kv_seq_width == 1 else \
             (batch, kv_seq_width, s, gp, a.d_head)
-    if abstract:
-        return {"k": jax.ShapeDtypeStruct(shape, dtype),
-                "v": jax.ShapeDtypeStruct(shape, dtype)}
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    def leaf(shp, dt):
+        return (jax.ShapeDtypeStruct(shp, dt) if abstract
+                else jnp.zeros(shp, dt))
+
+    out = {"k": leaf(shape, dtype), "v": leaf(shape, dtype)}
+    if scale_dtype is not None:
+        out["k_scale"] = leaf(shape[:-1], scale_dtype)
+        out["v_scale"] = leaf(shape[:-1], scale_dtype)
+    return out

@@ -86,7 +86,8 @@ class Model:
 
     def init_cache(self, batch: int, max_seq: int, *,
                    abstract: bool = False, dtype=None, paged: bool = False,
-                   num_blocks: int = 0, block_size: int = 0):
+                   num_blocks: int = 0, block_size: int = 0,
+                   scale_dtype=None):
         cfg, plan = self.cfg, self.plan
         dtype = dtype or jnp.dtype(plan.cache_dtype)
         if cfg.family == "encdec":
@@ -117,21 +118,25 @@ class Model:
                 c = attn_mod.init_cache(plan, batch, max_seq, dtype=dtype,
                                         abstract=True, kv_seq_width=kv_w,
                                         paged=paged, num_blocks=num_blocks,
-                                        block_size=block_size)
+                                        block_size=block_size,
+                                        scale_dtype=scale_dtype)
             else:
                 c = mamba_mod.init_mamba_state(cfg, plan, batch,
                                                abstract=True, dtype=dtype)
             out[f"l{j}"] = stack(c)
         return out
 
-    def cache_specs(self, env: AxisEnv, paged: bool = False):
+    def cache_specs(self, env: AxisEnv, paged: bool = False,
+                    kv_quant: bool = False):
         """PartitionSpec tree matching init_cache (decoder-only families).
 
         ``paged=True`` describes the shared block pool: stacked per-layer
         leaves are (n_sb, num_blocks, block_size, Gp, dh) with the stored
         kv heads (Gp) sharded over the model ring — each rank holds its
         head shard of EVERY block, so one host-side block table drives
-        all ranks and pool bytes split 1/tp per rank.
+        all ranks and pool bytes split 1/tp per rank.  ``kv_quant=True``
+        adds the quantized pool's scale side-array specs (same layout
+        minus the d_head axis, heads likewise ring-sharded).
         """
         cfg, plan = self.cfg, self.plan
         dp = tuple(env.dp) if env.dp else None
@@ -154,6 +159,9 @@ class Model:
                 if paged:
                     out[f"l{j}"] = {"k": P(None, None, None, m, None),
                                     "v": P(None, None, None, m, None)}
+                    if kv_quant:
+                        out[f"l{j}"]["k_scale"] = P(None, None, None, m)
+                        out[f"l{j}"]["v_scale"] = P(None, None, None, m)
                 elif kv_w > 1:
                     out[f"l{j}"] = {"k": P(None, dp, env.kv_seq_axis, None,
                                            m, None),

@@ -356,9 +356,18 @@ def _scatter_cache_updates(cache_st, upd, idx, seq_sharded: bool,
                     block_tables, (pos // bs_blk)[:, None], axis=1)[:, 0]
                 off = pos % bs_blk
                 out[lj] = {
-                    "k": c["k"].at[idx, blk, off].set(knew[:, 0]),
-                    "v": c["v"].at[idx, blk, off].set(vnew[:, 0]),
+                    "k": c["k"].at[idx, blk, off].set(
+                        knew[:, 0].astype(c["k"].dtype)),
+                    "v": c["v"].at[idx, blk, off].set(
+                        vnew[:, 0].astype(c["v"].dtype)),
                 }
+                if "k_scale_new" in u:
+                    # quantized pool: the row's absmax scales land beside
+                    # the int8/fp8 values at the same (block, offset)
+                    out[lj]["k_scale"] = c["k_scale"].at[idx, blk, off].set(
+                        u["k_scale_new"][:, 0].astype(c["k_scale"].dtype))
+                    out[lj]["v_scale"] = c["v_scale"].at[idx, blk, off].set(
+                        u["v_scale_new"][:, 0].astype(c["v_scale"].dtype))
             elif seq_sharded and c["k"].ndim == 6:
                 old_k = c["k"][idx, b_idx, 0, pos]
                 old_v = c["v"][idx, b_idx, 0, pos]

@@ -1,0 +1,121 @@
+"""Typed engine construction config — ONE object instead of ~20 kwargs.
+
+``EngineConfig`` groups every scalar construction knob of
+:class:`repro.serving.engine.LPUEngine` (the runtime objects — mesh,
+rng, drafter, draft model/params — stay direct constructor arguments:
+they are per-process resources, not serializable configuration).  The
+groups mirror the engine's subsystems:
+
+* paged pool:      ``paged``, ``block_size``, ``num_blocks``,
+                   ``kv_budget_bytes``, ``min_bucket``
+* kernel dataflow: ``paged_kernel``, ``block_s``
+* sampling loop:   ``sampling``, ``steps_per_sync``, ``pipeline``
+* prefill:         ``prefill_chunk``, ``prefix_cache``
+* speculation:     ``speculate``, ``draft_k``
+* precision:       ``kv_dtype``, ``w_dtype``  (NEW in this config —
+                   deliberately never added as constructor kwarg #21)
+
+Legacy construction (``LPUEngine(model, params, slots=8, ...)``) still
+works through :func:`resolve_engine_config`, which folds the kwargs
+into an ``EngineConfig`` and warns once per process — the shim is
+parity-tested (tests/test_engine_config.py) and slated for removal.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, fields, replace
+from typing import Optional
+
+KV_DTYPES = ("auto", "float16", "fp16", "bfloat16", "bf16", "float32",
+             "fp32", "int8", "fp8", "float8_e4m3fn")
+W_DTYPES = ("auto", "int8")
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Scalar construction knobs of an :class:`LPUEngine`.
+
+    Defaults are EXACTLY the legacy constructor defaults, so
+    ``EngineConfig()`` builds the same engine as the historical
+    no-kwarg call.
+    """
+    # core batch/sequence geometry
+    slots: int = 4
+    max_seq: int = 256
+    eos_id: Optional[int] = None
+    # paged KV pool
+    paged: Optional[bool] = None       # None = auto (attention-only stacks)
+    block_size: int = 0                # 0 = min(LANE, max_seq)
+    num_blocks: int = 0                # 0 = budget- or dense-equivalent
+    kv_budget_bytes: int = 0           # per-rank HBM budget for the pool
+    min_bucket: int = 16               # smallest pow2 prefill bucket
+    # kernel dataflow
+    paged_kernel: str = "auto"         # auto | stream | gather
+    block_s: int = 0                   # flash-chunk override (gather/dense)
+    # sampling loop
+    sampling: str = "fused"            # fused | host
+    steps_per_sync: int = 1            # fused window length
+    pipeline: bool = True              # double-buffer window dispatch
+    # prefill
+    prefill_chunk: int = 0             # 0 = monolithic bucketed prefill
+    prefix_cache: bool = False
+    # speculation
+    speculate: str = "off"             # off | ngram | model
+    draft_k: int = 4
+    # precision (the quantized-KV / int8-weight knobs live ONLY here)
+    kv_dtype: str = "auto"             # auto|float16|bfloat16|float32|
+                                       # int8|fp8 — pool storage precision
+    w_dtype: str = "auto"              # auto|int8 — streamed weight
+                                       # precision (gemv chain)
+
+    def __post_init__(self):
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype={self.kv_dtype!r} not in "
+                             f"{KV_DTYPES}")
+        if self.w_dtype not in W_DTYPES:
+            raise ValueError(f"w_dtype={self.w_dtype!r} not in {W_DTYPES}")
+
+    def with_overrides(self, **kw) -> "EngineConfig":
+        """A copy with the given fields replaced (frozen-safe)."""
+        return replace(self, **kw)
+
+
+_FIELD_NAMES = tuple(f.name for f in fields(EngineConfig))
+_legacy_warned = False
+
+
+def resolve_engine_config(config: Optional[EngineConfig],
+                          legacy_kwargs: dict) -> EngineConfig:
+    """Fold a (config, legacy kwargs) construction call into ONE config.
+
+    * config given, no legacy kwargs — the modern path, returned as-is.
+    * legacy kwargs only — folded into an ``EngineConfig``; a
+      ``DeprecationWarning`` fires ONCE per process (every legacy kwarg
+      has an identically-named config field, so migration is mechanical).
+    * both — an error: silently merging two sources of truth is how
+      config drift starts.
+    * unknown kwarg — ``TypeError``, same contract as a real signature.
+    """
+    global _legacy_warned
+    unknown = set(legacy_kwargs) - set(_FIELD_NAMES)
+    if unknown:
+        raise TypeError(
+            f"unknown engine option(s) {sorted(unknown)}; valid fields: "
+            f"{_FIELD_NAMES}")
+    if config is not None:
+        if legacy_kwargs:
+            raise ValueError(
+                "pass construction knobs through config=EngineConfig(...) "
+                f"OR as legacy kwargs, not both (got config plus "
+                f"{sorted(legacy_kwargs)})")
+        if not isinstance(config, EngineConfig):
+            raise TypeError(f"config must be an EngineConfig, got "
+                            f"{type(config).__name__}")
+        return config
+    if legacy_kwargs and not _legacy_warned:
+        _legacy_warned = True
+        warnings.warn(
+            "constructing LPUEngine from loose kwargs is deprecated; "
+            "pass config=EngineConfig(...) (fields are named identically)",
+            DeprecationWarning, stacklevel=3)
+    return EngineConfig(**legacy_kwargs)

@@ -88,6 +88,7 @@ from jax import lax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compiler.plan import resolve_kv_precision
 from repro.core.compat import shard_map
 from repro.core.dist import make_axis_env
 from repro.core.rings import reconfigure, submeshes
@@ -99,6 +100,7 @@ from repro.serving.kv_cache import (LANE, BlockPool, PrefixCache,
                                     pool_blocks_for_budget,
                                     scatter_prefill_dense,
                                     scatter_prefill_pages)
+from repro.serving.config import EngineConfig, resolve_engine_config
 from repro.serving.drafter import make_drafter
 from repro.serving.sampler import (SamplingParams, sample_batched,
                                    sample_local, sample_sharded_batched,
@@ -217,20 +219,30 @@ class LPUEngine:
     pool and the prefill caches are placed with the mapper's
     PartitionSpecs; block tables, positions and sampled tokens stay
     replicated host state, identical to the single-device loop.
+
+    Construction: ``LPUEngine(model, params, config=EngineConfig(...))``
+    with runtime objects (``mesh``, ``rng``, ``drafter``,
+    ``draft_model``/``draft_params``) as direct keyword arguments.
+    Loose scalar kwargs (``slots=8, paged=True, ...``) still work via
+    the deprecation shim in :mod:`repro.serving.config` — they fold
+    into an identical ``EngineConfig`` and warn once per process.
     """
 
-    def __init__(self, model, params, *, slots: int = 4,
-                 max_seq: int = 256, eos_id: Optional[int] = None,
-                 rng: Optional[jax.Array] = None,
-                 paged: Optional[bool] = None, block_size: int = 0,
-                 num_blocks: int = 0, min_bucket: int = 16,
-                 mesh=None, kv_budget_bytes: int = 0,
-                 paged_kernel: str = "auto", sampling: str = "fused",
-                 steps_per_sync: int = 1, pipeline: bool = True,
-                 block_s: int = 0, prefill_chunk: int = 0,
-                 prefix_cache: bool = False, speculate: str = "off",
-                 draft_k: int = 4, drafter=None, draft_model=None,
-                 draft_params=None):
+    def __init__(self, model, params,
+                 config: Optional[EngineConfig] = None, *,
+                 mesh=None, rng: Optional[jax.Array] = None,
+                 drafter=None, draft_model=None, draft_params=None,
+                 **legacy_kwargs):
+        c = resolve_engine_config(config, legacy_kwargs)
+        self.config = c
+        slots, max_seq, eos_id = c.slots, c.max_seq, c.eos_id
+        paged, block_size, num_blocks = c.paged, c.block_size, c.num_blocks
+        min_bucket, kv_budget_bytes = c.min_bucket, c.kv_budget_bytes
+        paged_kernel, sampling = c.paged_kernel, c.sampling
+        steps_per_sync, pipeline = c.steps_per_sync, c.pipeline
+        block_s, prefill_chunk = c.block_s, c.prefill_chunk
+        prefix_cache, speculate = c.prefix_cache, c.speculate
+        draft_k = c.draft_k
         self.model = model
         self.cfg = model.cfg
         self.plan = model.plan
@@ -254,6 +266,31 @@ class LPUEngine:
         if paged is None:
             paged = model.supports_paged_kv()
         self.paged = paged
+        # KV storage precision: "auto" stores at the plan's cache dtype
+        # (bit-identical to the historical engine); an explicit fp dtype
+        # restores the pool at that width; int8/fp8 adds per-(row, kv
+        # head) absmax scale side-arrays and in-kernel dequantization.
+        self.kv_prec = resolve_kv_precision(c.kv_dtype,
+                                            self.plan.cache_dtype)
+        if self.kv_prec.quantized:
+            if not paged:
+                raise ValueError(
+                    f"kv_dtype={c.kv_dtype!r} needs the paged KV pool: "
+                    "quantization is a pool-storage contract (scales "
+                    "live beside pool blocks); dense caches store fp")
+            if self.kv_prec.store_dtype == "float8_e4m3fn" and \
+                    not hasattr(jnp, "float8_e4m3fn"):
+                raise ValueError(
+                    "kv_dtype='fp8' needs jnp.float8_e4m3fn, which this "
+                    "jax build does not provide; use kv_dtype='int8'")
+        self.kv_dtype = self.kv_prec.store_dtype
+        # w_dtype is the streamed-weight precision of the gemv decode
+        # chain (core/streamline.decode_layer + kernels/gemv); the
+        # engine's full-model decode keeps fp weights.  It is carried
+        # here so the config round-trips and serving telemetry (bench
+        # rows, the serve banner) reports the precision pair the
+        # deployment requested.
+        self.w_dtype = c.w_dtype
         if paged_kernel not in ("auto", "stream", "gather"):
             raise ValueError(f"paged_kernel={paged_kernel!r} not in "
                              "('auto', 'stream', 'gather')")
@@ -288,27 +325,37 @@ class LPUEngine:
             if not num_blocks and kv_budget_bytes:
                 # size the pool from the per-rank HBM budget: heads are
                 # sharded over the ring, so a tp-ring stretches the same
-                # budget to tp x the resident tokens
+                # budget to tp x the resident tokens — and a quantized
+                # pool (block bytes ~halved, plus the scale side-array)
+                # admits correspondingly more blocks under the SAME
+                # budget: the memory half of the tentpole's claim
                 a = self.plan.attn
                 num_blocks = pool_blocks_for_budget(
                     kv_budget_bytes,
                     per_rank_block_bytes(
                         self.cfg.n_layers, a.kv_per_rank, a.d_head,
-                        self.block_size,
-                        jnp.dtype(self.plan.cache_dtype).itemsize))
+                        self.block_size, self.kv_prec.itemsize,
+                        self.kv_prec.scale_itemsize))
             # default pool: dense-equivalent capacity + the null block
             self.num_blocks = num_blocks or (slots * self.table_len + 1)
             pool = BlockPool(self.num_blocks, self.block_size)
+            store = (None if self.kv_prec.requested == "auto"
+                     else jnp.dtype(self.kv_prec.store_dtype))
+            scale_dt = (jnp.dtype(self.kv_prec.scale_dtype)
+                        if self.kv_prec.quantized else None)
             self.cache = model.init_cache(
                 slots, max_seq, paged=True, num_blocks=self.num_blocks,
-                block_size=self.block_size)
+                block_size=self.block_size, dtype=store,
+                scale_dtype=scale_dt)
             self.block_tables = np.zeros((slots, self.table_len), np.int32)
         else:
             self.block_size = max_seq
             self.table_len = 1
             self.num_blocks = slots
             pool = None
-            self.cache = model.init_cache(slots, max_seq)
+            store = (None if self.kv_prec.requested == "auto"
+                     else jnp.dtype(self.kv_prec.store_dtype))
+            self.cache = model.init_cache(slots, max_seq, dtype=store)
             self.block_tables = None
         # paged decode dataflow: "stream" runs the Pallas paged kernel
         # straight off the pool (scalar-prefetched block table, no
@@ -580,7 +627,8 @@ class LPUEngine:
         mesh, m = self.mesh, self.plan.tp_axis
         specs, _ = self.model.param_specs()
         self.params = jax.device_put(self.params, self._named(specs))
-        cspecs = self.model.cache_specs(self.env, paged=self.paged)
+        cspecs = self.model.cache_specs(self.env, paged=self.paged,
+                                        kv_quant=self.kv_prec.quantized)
         self._mesh_specs = (specs, cspecs)
         cspecs_named = self._named(cspecs)
         self.cache = jax.device_put(self.cache, cspecs_named)
@@ -1433,11 +1481,18 @@ class LPUEngine:
           first — read the pool span, write the view, then attention
           reads the view back: ``3 * V``.  This is the O(resident-tokens)
           copy per layer per token the streamed kernel removes.
+
+        A quantized pool streams at the quantized byte width PLUS its
+        scale side-array (one scale per (row, kv head)): per (position,
+        head) that is ``d_head * store_itemsize + scale_itemsize``
+        bytes instead of ``d_head * fp_itemsize`` — the bandwidth half
+        of the tentpole's claim (the accuracy half is serving_bench's
+        drift gate).
         """
         a = self.plan.attn
-        itemsize = jnp.dtype(self.plan.cache_dtype).itemsize
+        row = self.kv_prec.bytes_per_row_head(a.d_head)
         v = 2 * self.cfg.n_layers * self.slots * self.table_len \
-            * self.block_size * a.gp * a.d_head * itemsize
+            * self.block_size * a.gp * row
         return 3 * v if self.paged_kernel == "gather" else v
 
     def dense_equiv_bytes(self) -> int:
@@ -1464,8 +1519,7 @@ class LPUEngine:
         a = self.plan.attn
         gs = max(a.hp // max(a.gp, 1), 1) if a is not None else 1
         dh = a.d_head if a is not None else LANE
-        return plan_block_s(self.max_seq, dh, gs,
-                            jnp.dtype(self.plan.cache_dtype).itemsize)
+        return plan_block_s(self.max_seq, dh, gs, self.kv_prec.itemsize)
 
     def lower_decode_text(self) -> str:
         """MLIR of the decode program this engine will actually run (the
@@ -1511,14 +1565,15 @@ class MultiRingEngine:
     """
 
     def __init__(self, model, params, mesh, *, ring_size: int,
-                 **engine_kw):
+                 config: Optional[EngineConfig] = None, **engine_kw):
         total = mesh.devices.shape[-1]
         self.ring_cfg = reconfigure(total, ring_size)
         assert self.ring_cfg.validate_disjoint()
         assert model.plan.tp == ring_size, \
             (f"model planned for tp={model.plan.tp}, "
              f"ring_size={ring_size}")
-        self.engines = [LPUEngine(model, params, mesh=sub, **engine_kw)
+        self.engines = [LPUEngine(model, params, config, mesh=sub,
+                                  **engine_kw)
                         for sub in submeshes(mesh, ring_size)]
         self.router = RingRouter(len(self.engines))
         self.ring_of: Dict[int, int] = {}

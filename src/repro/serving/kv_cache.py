@@ -58,16 +58,22 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
 
 def per_rank_block_bytes(n_layers: int, kv_heads_per_rank: int,
                          d_head: int, block_size: int,
-                         dtype_bytes: int = 2) -> int:
+                         dtype_bytes: int = 2,
+                         scale_bytes: int = 0) -> int:
     """Bytes ONE pool block occupies on ONE ring rank (K and V).
 
     Under tensor parallelism the pool's stored-head dim is sharded over
     the model ring, so each rank holds ``kv_heads_per_rank`` of every
     block — pool HBM divides by tp, which is what lets a tp-wide ring
     serve proportionally longer contexts at a fixed per-chip budget.
+
+    ``scale_bytes`` is the per-(row, head) side-array cost of a
+    quantized pool (``KVPrecision.scale_itemsize``), so budget sizing
+    (``--kv-budget-mb``) stays honest about the scales it must co-locate
+    — an int8 pool admits ~2x the fp16 blocks, not exactly 2x.
     """
-    return 2 * n_layers * block_size * kv_heads_per_rank * d_head \
-        * dtype_bytes
+    return 2 * n_layers * block_size * kv_heads_per_rank \
+        * (d_head * dtype_bytes + scale_bytes)
 
 
 def pool_blocks_for_budget(budget_bytes: int, block_bytes: int) -> int:
@@ -314,11 +320,56 @@ def copy_pool_block(cache: Params, src: jax.Array, dst: jax.Array) -> Params:
 
 
 # ---------------------------------------------------------------------------
+# quantized storage: absmax row quantization + the pool's scale side-arrays
+# ---------------------------------------------------------------------------
+
+def qmax_for_dtype(dtype) -> float:
+    """Symmetric clip bound of a quantized pool leaf dtype."""
+    d = jnp.dtype(dtype)
+    if d == jnp.int8:
+        return 127.0
+    if d.name == "float8_e4m3fn":
+        return 448.0
+    raise ValueError(f"not a quantized KV storage dtype: {d.name}")
+
+
+def quantize_kv_rows(rows: jax.Array, store_dtype,
+                     scale_dtype) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric absmax quantization of KV rows along the head dim.
+
+    rows: (..., dh) float K (or V) rows.  Returns ``(q, scales)`` with
+    ``q`` shaped like ``rows`` in ``store_dtype`` and ``scales`` shaped
+    ``rows.shape[:-1]`` in ``scale_dtype`` — one scale per stored token
+    row per kv head, the side array the pool carries next to the values.
+    All-zero rows get scale 0 (dequantizes to exact zeros, the null
+    block's contract); the divisor is made safe so they never NaN.
+    """
+    qmax = qmax_for_dtype(store_dtype)
+    x = rows.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = amax / qmax
+    y = x / jnp.where(scale > 0, scale, 1.0)[..., None]
+    if jnp.dtype(store_dtype) == jnp.int8:
+        q = jnp.clip(jnp.round(y), -qmax, qmax).astype(store_dtype)
+    else:
+        q = jnp.clip(y, -qmax, qmax).astype(store_dtype)
+    return q, scale.astype(scale_dtype)
+
+
+def dequantize_kv(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_kv_rows` (fp32 out)."""
+    return q.astype(jnp.float32) * scales.astype(jnp.float32)[..., None]
+
+
+# ---------------------------------------------------------------------------
 # device-side pool plumbing (pure functions; the engine jits them)
 # ---------------------------------------------------------------------------
 
 def cache_bytes(cache: Params) -> int:
-    """Total bytes of a KV cache pytree (dense slot cache or block pool)."""
+    """Total bytes of a KV cache pytree (dense slot cache or block pool).
+
+    Scale side-arrays of a quantized pool are ordinary pytree leaves, so
+    the reported bytes include them — pool accounting stays honest."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
 
 
@@ -331,6 +382,12 @@ def scatter_prefill_pages(cache: Params, prefill_cache: Params,
                    multiple of bs
     table:         (S // bs,) physical block ids; pad entries point at the
                    null block 0, which absorbs the padded tokens' KV.
+
+    A quantized pool carries ``k_scale``/``v_scale`` side-array leaves
+    ((n_sb, N, bs, gp)); prefill stays full-precision in its bucket
+    cache and quantization happens HERE, at pool-write time, so the
+    quantized path shares one numerical contract with the chunked /
+    speculative row scatters.
     """
     out: Params = {}
     for lj, c in cache.items():
@@ -342,7 +399,14 @@ def scatter_prefill_pages(cache: Params, prefill_cache: Params,
             S = dn.shape[2]
             nb = S // bs
             chunks = dn[:, 0].reshape((n_sb, nb, bs) + dn.shape[3:])
-            layer[key] = pg.at[:, table].set(chunks.astype(pg.dtype))
+            skey = key + "_scale"
+            if skey in c:
+                spg = c[skey]
+                q, s = quantize_kv_rows(chunks, pg.dtype, spg.dtype)
+                layer[key] = pg.at[:, table].set(q)
+                layer[skey] = spg.at[:, table].set(s)
+            else:
+                layer[key] = pg.at[:, table].set(chunks.astype(pg.dtype))
         out[lj] = layer
     return out
 
@@ -366,6 +430,11 @@ def scatter_chunk_rows(pages: jax.Array, rows: jax.Array,
     positions:   (C,) absolute token positions of the chunk rows
     valid:       (C,) bool; padded rows are routed to the null block 0
                  (absorbed don't-care traffic, masked on read).
+
+    Shapes generalize over the trailing dims: a quantized pool's scale
+    side-array ((N, bs, G) pages, (C, G) rows) scatters through the
+    SAME function, so values and scales stay row-consistent by
+    construction.
     """
     bs = pages.shape[1]
     T = block_table.shape[0]

@@ -1,0 +1,113 @@
+"""EngineConfig: the consolidated construction API + the legacy shim.
+
+The redesign's contract: every scalar engine knob lives on ONE frozen
+dataclass, ``LPUEngine(model, params, config=...)`` is the single
+construction path, and the legacy ~20-kwarg call keeps working through
+a parity-tested deprecation shim (warns once per process).
+"""
+import warnings
+
+import jax
+import pytest
+
+from repro.compiler.mapper import plan_model
+from repro.configs import get_config
+from repro.models.registry import build_model
+from repro.serving import config as config_mod
+from repro.serving.config import EngineConfig, resolve_engine_config
+from repro.serving.engine import LPUEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("smollm-135m").reduced()
+    plan = plan_model(cfg, None, (1,), "serve", esl_overlap=False,
+                      remat="none", compute_dtype="float32",
+                      param_dtype="float32")
+    model = build_model(cfg, plan)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7]]
+
+
+def test_defaults_match_legacy_defaults():
+    c = EngineConfig()
+    assert (c.slots, c.max_seq, c.paged) == (4, 256, None)
+    assert (c.sampling, c.steps_per_sync, c.pipeline) == ("fused", 1, True)
+    assert (c.kv_dtype, c.w_dtype) == ("auto", "auto")
+
+
+def test_resolver_contracts():
+    c = EngineConfig(slots=2)
+    assert resolve_engine_config(c, {}) is c
+    with pytest.raises(ValueError, match="not both"):
+        resolve_engine_config(c, {"slots": 3})
+    with pytest.raises(TypeError, match="unknown engine option"):
+        resolve_engine_config(None, {"slotz": 3})
+    with pytest.raises(TypeError, match="EngineConfig"):
+        resolve_engine_config({"slots": 2}, {})
+
+
+def test_validation_rejects_bad_dtypes():
+    with pytest.raises(ValueError, match="kv_dtype"):
+        EngineConfig(kv_dtype="int4")
+    with pytest.raises(ValueError, match="w_dtype"):
+        EngineConfig(w_dtype="fp8")
+
+
+def test_with_overrides_is_frozen_safe():
+    c = EngineConfig(slots=2)
+    d = c.with_overrides(max_seq=64, kv_dtype="int8")
+    assert (d.slots, d.max_seq, d.kv_dtype) == (2, 64, "int8")
+    assert (c.max_seq, c.kv_dtype) == (256, "auto")   # original untouched
+    with pytest.raises(Exception):
+        c.slots = 3                                   # frozen
+
+
+def test_legacy_shim_warns_once_and_matches_config(tiny_model):
+    """The deprecation shim's parity contract: loose kwargs build the
+    SAME engine as the equivalent EngineConfig, and the warning fires
+    exactly once per process."""
+    model, params = tiny_model
+    config_mod._legacy_warned = False
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        legacy = LPUEngine(model, params, slots=2, max_seq=64,
+                           paged=True, block_size=16)
+    assert sum(issubclass(w.category, DeprecationWarning)
+               for w in rec) == 1
+    with warnings.catch_warnings(record=True) as rec2:
+        warnings.simplefilter("always")
+        LPUEngine(model, params, slots=2, max_seq=64)
+    assert not any(issubclass(w.category, DeprecationWarning)
+                   for w in rec2)                     # once per process
+    modern = LPUEngine(model, params,
+                       EngineConfig(slots=2, max_seq=64, paged=True,
+                                    block_size=16))
+    assert legacy.config == modern.config
+    ol = legacy.generate(PROMPTS, max_new_tokens=6)
+    om = modern.generate(PROMPTS, max_new_tokens=6)
+    assert ol == om
+
+
+def test_engine_rejects_mixed_sources(tiny_model):
+    model, params = tiny_model
+    with pytest.raises(ValueError, match="not both"):
+        LPUEngine(model, params, EngineConfig(slots=2), max_seq=64)
+
+
+def test_engine_rejects_unknown_kwarg(tiny_model):
+    model, params = tiny_model
+    with pytest.raises(TypeError, match="unknown engine option"):
+        LPUEngine(model, params, slotz=2)
+
+
+def test_engine_records_its_config(tiny_model):
+    model, params = tiny_model
+    c = EngineConfig(slots=2, max_seq=64)
+    eng = LPUEngine(model, params, c)
+    assert eng.config is c
+    assert (eng.slots, eng.max_seq) == (2, 64)
+    assert (eng.kv_dtype, eng.w_dtype) == ("float32", "auto")
