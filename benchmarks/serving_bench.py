@@ -48,6 +48,12 @@ statistics the paged refactor targets:
   ``acceptance_rate`` / ``accepted_per_window`` record the win,
   ``decode_steps`` collapses below one round per token, and the token
   streams must be bit-identical to the spec-off run.
+* **fault-tolerance accounting (paged-stream-chaos)** — the same trace
+  through a 2-ring host fleet with ``--chaos``-style injection (ring
+  failure, stalled window, NaN logits, corrupted pool block); the
+  smoke gate asserts completed + failed == submitted, every surviving
+  greedy stream bit-identical to the chaos-off fleet, and zero leaked
+  pool blocks after the rebuilds (docs/serving.md "Fault tolerance").
 * **KV-precision accounting (kv-fp16 vs kv-int8)** — the quantized-KV
   tentpole's memory claim: the same trace under the SAME per-rank HBM
   budget, pool stored at fp16 vs int8 + per-(row, kv-head) fp16 absmax
@@ -255,6 +261,66 @@ def ring_rows(cfg, prompts, dense_outs, args):
     return rows, ring_stats
 
 
+def chaos_section(model, params, prompts, max_new, fleet_kw):
+    """Fault-tolerance contrast (docs/serving.md §Fault tolerance): the
+    same trace through a 2-ring host fleet twice — chaos off (baseline
+    streams) vs chaos on, injecting a ring failure, a stalled window, a
+    NaN-logits event and a corrupted pool block mid-run.  The gates are
+    the PR's recovery claims: the drain never raises, every request is
+    accounted for (completed + failed == submitted), every surviving
+    greedy stream is bit-identical to the chaos-off baseline (recovery
+    is recompute-resume), and after the rebuilds every engine's pool
+    refcounts balance to zero leaks."""
+    from repro.serving.engine import MultiRingEngine
+
+    # ring 0 eats an outright failure, NaN logits and a corrupted pool
+    # block (three separate recovery cycles — _step_no and the fired-set
+    # survive each rebuild, so later events still fire); ring 1 wedges
+    # and is drained by the heartbeat timeout (ManualClock: 1 virtual
+    # second per fleet round).
+    spec = "ring@2,stall@3:1,nan@5,corrupt@8"
+    off = EngineConfig(chaos="", heartbeat_timeout_s=4.0, **fleet_kw)
+    on = EngineConfig(chaos=spec, heartbeat_timeout_s=4.0, **fleet_kw)
+    base = MultiRingEngine(model, params, None, rings=2, config=off)
+    base_outs = base.generate(prompts, max_new_tokens=max_new)
+    fleet = MultiRingEngine(model, params, None, rings=2, config=on)
+    rids = [fleet.submit(list(p), max_new) for p in prompts]
+    results = fleet.drain()          # must not raise: that IS the gate
+    outs = [results[r] for r in rids]
+    survivors = [i for i, r in enumerate(rids) if r not in fleet.failed]
+    diverged = sum(1 for i in survivors if outs[i] != base_outs[i])
+    for eng in fleet.engines:        # zero leaked blocks post-rebuild
+        eng.check_pool_balanced()
+    fc = fleet.fleet_counters()
+    sec = {
+        "mode": "paged-stream-chaos",
+        "chaos_spec": spec,
+        "submitted": len(rids),
+        "completed": len(survivors),
+        "failed": fc["failed_requests"],
+        "ring_failures": fc["ring_failures"],
+        "migrated_requests": fc["migrated_requests"],
+        "retries": fc["retries"],
+        "rejected_requests": fc["rejected_requests"],
+        "events": fc["events"],
+        "survivor_stream_divergence": diverged,
+        "leaked_blocks": 0,          # check_pool_balanced passed above
+    }
+    assert sec["completed"] + sec["failed"] == sec["submitted"], \
+        (sec, "chaos run lost requests: completed + failed != submitted")
+    assert all(len(outs[i]) == max_new for i in survivors), \
+        "a surviving request's stream is short"
+    assert diverged == 0, \
+        (diverged, "surviving streams diverged from the chaos-off "
+         "baseline: recovery is not bit-exact")
+    assert sec["ring_failures"] >= 1 and sec["retries"] >= 1, \
+        (sec, "chaos spec injected faults but no recovery cycle ran")
+    for req in fleet.failed.values():
+        assert req.failed and req.error, \
+            "failed request lacks structured status"
+    return sec
+
+
 REQUIRED_ROW_KEYS = {"mode", "tokens_per_s", "ms_per_token", "occupancy",
                      "decode_steps", "prefills", "prefill_traces",
                      "preemptions", "kv_bytes", "kv_dense_equiv_bytes",
@@ -276,9 +342,17 @@ REQUIRED_ROW_KEYS = {"mode", "tokens_per_s", "ms_per_token", "occupancy",
 def validate_bench(out: dict) -> None:
     """Schema + NaN/inf gate for the CI perf-trajectory artifact."""
     for key in ("requests", "distinct_prompt_lengths",
-                "bucket_trace_bound_log2", "rows", "same_output"):
+                "bucket_trace_bound_log2", "rows", "same_output",
+                "chaos"):
         if key not in out:
             raise ValueError(f"BENCH schema: missing top-level key {key!r}")
+    if out["chaos"].get("mode") != "paged-stream-chaos":
+        raise ValueError("BENCH schema: chaos section must carry mode "
+                         "'paged-stream-chaos'")
+    for key in ("submitted", "completed", "failed", "ring_failures",
+                "survivor_stream_divergence", "leaked_blocks"):
+        if key not in out["chaos"]:
+            raise ValueError(f"BENCH schema: chaos section missing {key!r}")
     if not out["rows"]:
         raise ValueError("BENCH schema: empty rows")
     modes = {r["mode"] for r in out["rows"]}
@@ -597,6 +671,15 @@ def main():
     if args.tp > 1:
         scaling_rows, ring_stats = ring_rows(cfg, prompts, dense_outs,
                                              args)
+    # fault-tolerance contrast: a 2-ring host fleet under injected
+    # chaos, gated on full request accounting, bit-exact survivors and
+    # zero leaked blocks (dense-equivalent pool: migration is already
+    # recompute, pool pressure would only add preemption noise)
+    chaos = chaos_section(
+        model, params, prompts, args.max_new,
+        dict(slots=args.slots, max_seq=args.max_seq, paged=True,
+             block_size=args.block_size,
+             num_blocks=args.slots * table_len + 1))
 
     out = {
         "requests": args.requests,
@@ -605,6 +688,7 @@ def main():
         "rows": rows,
         "scaling_rows": scaling_rows,
         "per_ring": ring_stats,
+        "chaos": chaos,
         "same_output": all(r["same_output_as_dense"] for r in rows),
     }
     if args.json:
@@ -650,6 +734,14 @@ def main():
         print(f"  bucketed prefill traces <= log2(max_seq)+1 = "
               f"{bucket_bound} (vs {distinct_lengths} distinct lengths); "
               f"outputs identical: {out['same_output']}")
+        print(f"  {chaos['mode']:>22}: chaos={chaos['chaos_spec']}  "
+              f"{chaos['completed']}/{chaos['submitted']} completed "
+              f"({chaos['failed']} failed)  "
+              f"ring_failures {chaos['ring_failures']}  "
+              f"migrated {chaos['migrated_requests']}  "
+              f"retries {chaos['retries']}  "
+              f"diverged {chaos['survivor_stream_divergence']}  "
+              f"leaked {chaos['leaked_blocks']}")
         for r in scaling_rows:
             extra = "" if "occupancy" not in r else \
                 (f"  occ {r['occupancy']:.2f}  "

@@ -121,6 +121,25 @@ def token_latency(cfg: ArchConfig, n_devices: int, hw: HWConfig, *,
     }
 
 
+def step_time_prior(cfg: ArchConfig, n_devices: int, hw: HWConfig, *,
+                    kv_len: int = 1024, steps_per_sync: int = 1,
+                    overlap: bool = True, dtype_bytes: int = 2) -> float:
+    """Expected SECONDS one serving engine ``step()`` takes on ``hw``.
+
+    The serving fault-tolerance layer seeds each ring's
+    :class:`repro.serving.ft.StragglerMonitor` with this prior
+    (``mu0``), so step-time outlier detection is armed from the first
+    measured step instead of treating whatever the first step costs as
+    the baseline.  A fused window runs ``steps_per_sync`` decode steps
+    per host sync, so the prior scales linearly with the window.
+    """
+    if steps_per_sync < 1:
+        raise ValueError(f"steps_per_sync={steps_per_sync} must be >= 1")
+    lat = token_latency(cfg, n_devices, hw, overlap=overlap,
+                        kv_len=kv_len, dtype_bytes=dtype_bytes)
+    return lat["ms_per_token"] * 1e-3 * steps_per_sync
+
+
 def fit_vector_params(points: Sequence[Tuple[ArchConfig, int, HWConfig,
                                              int, float]]
                       ) -> Tuple[float, float, float, float]:

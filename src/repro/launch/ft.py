@@ -1,102 +1,15 @@
-"""Fault-tolerance & straggler machinery for the training driver.
+"""Compatibility shim: fault-tolerance policies live in
+:mod:`repro.serving.ft` now.
 
-Designed for 1000+-node operation; on this single host the *policies*
-are fully implemented and unit-tested, and the cluster actions they
-would trigger are surfaced as structured events:
-
-* :class:`StragglerMonitor` — EWMA/σ step-time outlier detection.  At
-  pod scale the emitted ``rebalance`` event triggers hot-spare swap-in
-  (the same checkpoint-restart path as failure recovery — TPU pods
-  cannot shrink a mesh in place, so recovery == restart from the last
-  atomic checkpoint on a respecced slice; see CheckpointManager).
-* :class:`HeartbeatTracker` — per-worker liveness with configurable
-  timeout; a missed heartbeat marks the worker failed and requests
-  restart (simulated in tests by injecting silence).
-* :class:`FailureInjector` — deterministic chaos hook used by the
-  integration tests to kill a step and assert the driver resumes
-  losslessly from the latest checkpoint.
+These classes began life next to the training driver but were always
+generic step-telemetry policies; the serving fault-tolerance subsystem
+(chaos injection, ring drain/rebuild, request migration — see
+docs/serving.md "Fault tolerance & graceful degradation") is their real
+consumer, so the implementation moved to ``repro.serving.ft``.  The
+training driver and its tests keep importing from here unchanged.
 """
-from __future__ import annotations
+from repro.serving.ft import (Event, FailureInjector, HeartbeatTracker,  # noqa: F401
+                              StragglerMonitor)
 
-import math
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
-
-
-@dataclass
-class Event:
-    kind: str            # 'straggler' | 'worker_failed' | 'rebalance'
-    step: int
-    detail: dict
-
-
-class StragglerMonitor:
-    """EWMA + variance step-time tracking; flags > mu + k*sigma."""
-
-    def __init__(self, alpha: float = 0.1, k_sigma: float = 3.0,
-                 warmup: int = 5, cooldown: int = 20,
-                 min_slack: float = 0.25):
-        self.alpha = alpha
-        self.k = k_sigma
-        self.warmup = warmup
-        self.cooldown = cooldown
-        self.min_slack = min_slack     # never flag < (1+slack)*mu drift
-        self.mu: Optional[float] = None
-        self.var: float = 0.0
-        self.n = 0
-        self._last_flag = -10 ** 9
-        self.events: List[Event] = []
-
-    def record(self, step: int, dt: float) -> Optional[Event]:
-        self.n += 1
-        if self.mu is None:
-            self.mu = dt
-            return None
-        thresh = max(self.mu + self.k * math.sqrt(self.var + 1e-12),
-                     self.mu * (1.0 + self.min_slack))
-        flagged = (self.n > self.warmup and dt > thresh
-                   and step - self._last_flag >= self.cooldown)
-        # EWMA update (skip outliers so one straggler doesn't poison mu)
-        if not flagged:
-            d = dt - self.mu
-            self.mu += self.alpha * d
-            self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
-        if flagged:
-            self._last_flag = step
-            ev = Event("straggler", step,
-                       {"dt": dt, "mu": self.mu, "thresh": thresh})
-            self.events.append(ev)
-            return ev
-        return None
-
-
-class HeartbeatTracker:
-    def __init__(self, n_workers: int, timeout_s: float = 60.0):
-        self.timeout = timeout_s
-        self.last: Dict[int, float] = {i: time.time()
-                                       for i in range(n_workers)}
-        self.failed: List[int] = []
-
-    def beat(self, worker: int, now: Optional[float] = None):
-        self.last[worker] = now if now is not None else time.time()
-
-    def check(self, now: Optional[float] = None) -> List[int]:
-        now = now if now is not None else time.time()
-        newly = [w for w, t in self.last.items()
-                 if now - t > self.timeout and w not in self.failed]
-        self.failed.extend(newly)
-        return newly
-
-
-class FailureInjector:
-    """Deterministic chaos: raise at configured steps (tests/examples)."""
-
-    def __init__(self, fail_at_steps=()):
-        self.fail_at = set(fail_at_steps)
-        self.fired = set()
-
-    def maybe_fail(self, step: int):
-        if step in self.fail_at and step not in self.fired:
-            self.fired.add(step)
-            raise RuntimeError(f"[chaos] injected failure at step {step}")
+__all__ = ["Event", "FailureInjector", "HeartbeatTracker",
+           "StragglerMonitor"]

@@ -60,6 +60,7 @@ import numpy as np  # noqa: E402
 
 from repro.compiler.mapper import plan_model  # noqa: E402
 from repro.configs import get_config  # noqa: E402
+from repro.core.latency_model import LPU_FPGA, step_time_prior  # noqa: E402
 from repro.launch.mesh import make_serving_mesh  # noqa: E402
 from repro.models.registry import build_model  # noqa: E402
 from repro.serving.config import EngineConfig  # noqa: E402
@@ -143,6 +144,18 @@ def main():
                     choices=("auto", "int8"),
                     help="streamed weight precision of the gemv chain "
                          "(int8 with per-output-column scales)")
+    ap.add_argument("--chaos", default="",
+                    help="deterministic fault injection: comma-separated "
+                         "kind@step[:ring] with kinds ring|stall|nan|"
+                         "corrupt (e.g. 'ring@3,nan@7:1'); forces the "
+                         "supervised fleet driver — see docs/serving.md "
+                         "'Fault tolerance'")
+    ap.add_argument("--max-migrations", type=int, default=3,
+                    help="recompute-migrations per request before it "
+                         "surfaces a structured failure")
+    ap.add_argument("--heartbeat-timeout", type=float, default=30.0,
+                    help="ring liveness timeout in (virtual, under "
+                         "chaos) seconds before drain/rebuild")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -185,11 +198,29 @@ def main():
                          prefill_chunk=args.prefill_chunk,
                          prefix_cache=args.prefix_cache == "on",
                          speculate=args.speculate, draft_k=args.draft_k,
-                         kv_dtype=args.kv_dtype, w_dtype=args.w_dtype)
-    if rings > 1:
-        engine = MultiRingEngine(model, params, mesh, ring_size=tp,
-                                 config=econf, draft_model=draft_model,
-                                 draft_params=draft_params)
+                         kv_dtype=args.kv_dtype, w_dtype=args.w_dtype,
+                         chaos=args.chaos,
+                         max_migrations=args.max_migrations,
+                         heartbeat_timeout_s=args.heartbeat_timeout)
+    fleet = rings > 1 or bool(args.chaos)
+    if fleet:
+        # seed each ring's straggler monitor with the analytic latency
+        # model's step-time prior (LPU-FPGA point) so outlier detection
+        # is armed from the first measured step
+        prior = step_time_prior(cfg, max(tp, 1), LPU_FPGA,
+                                kv_len=args.max_seq,
+                                steps_per_sync=args.steps_per_sync)
+        if mesh is not None:
+            engine = MultiRingEngine(model, params, mesh, ring_size=tp,
+                                     config=econf, step_prior_s=prior,
+                                     draft_model=draft_model,
+                                     draft_params=draft_params)
+        else:
+            engine = MultiRingEngine(model, params, None,
+                                     rings=max(rings, 1), config=econf,
+                                     step_prior_s=prior,
+                                     draft_model=draft_model,
+                                     draft_params=draft_params)
         first = engine.engines[0]
     else:
         engine = LPUEngine(model, params, econf, mesh=mesh,
@@ -209,14 +240,22 @@ def main():
     outs = engine.generate(prompts, max_new_tokens=args.max_new,
                            params=sp, stream_cb=cb)
     mode = f"paged/{first.paged_kernel}" if first.paged else "dense"
-    if rings > 1:
-        print(f"[serve] {len(outs)} requests over {rings} sub-rings "
-              f"(tp={tp} each), routed {engine.router.routed}")
+    if fleet:
+        print(f"[serve] {len(outs)} requests over {engine.n_rings} "
+              f"sub-rings (tp={tp} each), routed {engine.router.routed}")
         for i, (eng, st) in enumerate(zip(engine.engines,
                                           engine.per_ring_stats())):
             print(f"[serve]   ring{i}: {st.tokens} tokens, "
                   f"{st.tokens_per_s:.1f} tok/s, occ {st.occupancy:.2f}, "
                   f"kv/rank {eng.per_rank_kv_bytes()} B")
+        fc = engine.fleet_counters()
+        print(f"[serve] ft: chaos={args.chaos or 'off'} "
+              f"ring_failures={fc['ring_failures']} "
+              f"migrated={fc['migrated_requests']} "
+              f"retries={fc['retries']} "
+              f"rejected={fc['rejected_requests']} "
+              f"failed={fc['failed_requests']} "
+              f"events={fc['events']}")
     else:
         st = first.stats
         print(f"[serve] {len(outs)} requests, {st.tokens} tokens, "

@@ -14,6 +14,10 @@ groups mirror the engine's subsystems:
 * speculation:     ``speculate``, ``draft_k``
 * precision:       ``kv_dtype``, ``w_dtype``  (NEW in this config —
                    deliberately never added as constructor kwarg #21)
+* fault tolerance: ``chaos``, ``max_migrations``,
+                   ``heartbeat_timeout_s``, ``ft_straggler_drain``
+                   (the serving FT subsystem — see
+                   :mod:`repro.serving.ft` and docs/serving.md)
 
 Legacy construction (``LPUEngine(model, params, slots=8, ...)``) still
 works through :func:`resolve_engine_config`, which folds the kwargs
@@ -67,6 +71,18 @@ class EngineConfig:
                                        # int8|fp8 — pool storage precision
     w_dtype: str = "auto"              # auto|int8 — streamed weight
                                        # precision (gemv chain)
+    # fault tolerance (serving FT subsystem; see repro.serving.ft)
+    chaos: str = ""                    # "" = off; else deterministic
+                                       # fault spec "kind@step[:ring],..."
+                                       # with kinds ring|stall|nan|corrupt
+    max_migrations: int = 3            # recompute-migrations per request
+                                       # before it surfaces a structured
+                                       # failure (never an engine crash)
+    heartbeat_timeout_s: float = 30.0  # ring liveness timeout (clock is
+                                       # injected; deterministic in chaos
+                                       # runs via ManualClock)
+    ft_straggler_drain: bool = False   # drain/rebuild a straggler-flagged
+                                       # ring (default: log the event only)
 
     def __post_init__(self):
         if self.kv_dtype not in KV_DTYPES:
@@ -74,6 +90,16 @@ class EngineConfig:
                              f"{KV_DTYPES}")
         if self.w_dtype not in W_DTYPES:
             raise ValueError(f"w_dtype={self.w_dtype!r} not in {W_DTYPES}")
+        if self.chaos:
+            from repro.serving.ft import parse_chaos
+            parse_chaos(self.chaos)    # fail at construction, not mid-run
+        if self.max_migrations < 0:
+            raise ValueError(
+                f"max_migrations={self.max_migrations} must be >= 0")
+        if self.heartbeat_timeout_s <= 0:
+            raise ValueError(
+                f"heartbeat_timeout_s={self.heartbeat_timeout_s} "
+                "must be > 0")
 
     def with_overrides(self, **kw) -> "EngineConfig":
         """A copy with the given fields replaced (frozen-safe)."""

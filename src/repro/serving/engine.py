@@ -95,6 +95,7 @@ from repro.core.rings import reconfigure, submeshes
 from repro.kernels.decode_attention.ops import (plan_block_s,
                                                 resolve_paged_kernel)
 from repro.serving.kv_cache import (LANE, BlockPool, PrefixCache,
+                                    assert_pool_balanced,
                                     cache_bytes, copy_pool_block,
                                     per_rank_block_bytes,
                                     pool_blocks_for_budget,
@@ -102,6 +103,9 @@ from repro.serving.kv_cache import (LANE, BlockPool, PrefixCache,
                                     scatter_prefill_pages)
 from repro.serving.config import EngineConfig, resolve_engine_config
 from repro.serving.drafter import make_drafter
+from repro.serving.ft import (Event, FailureInjector, HeartbeatTracker,
+                              ManualClock, RingFailure, StragglerMonitor,
+                              parse_chaos)
 from repro.serving.sampler import (SamplingParams, sample_batched,
                                    sample_local, sample_sharded_batched,
                                    spec_verify_rows,
@@ -121,6 +125,11 @@ class Request:
     out: List[int] = field(default_factory=list)
     done: bool = False
     stream_cb: Optional[StreamCB] = None
+    failed: bool = False          # structured failure (rejection, or
+                                  # migration retries exhausted) — the
+                                  # request is done but its stream is
+                                  # incomplete; ``error`` says why
+    error: Optional[str] = None
 
     def resume_tokens(self) -> List[int]:
         """Tokens whose KV must be resident before decoding continues.
@@ -170,6 +179,17 @@ class EngineStats:
     spec_rounds: int = 0          # speculative verify rounds dispatched
     draft_tokens: int = 0         # drafter-proposed tokens verified
     accepted_tokens: int = 0      # ...accepted by rejection sampling
+    ring_failures: int = 0        # drain/rebuild cycles this engine went
+                                  # through (detected or injected faults)
+    migrated_requests: int = 0    # in-flight requests this engine took
+                                  # over from a failed ring (recompute
+                                  # resume via Request.resume_tokens)
+    retries: int = 0              # recovery resubmissions admitted here
+                                  # (every migration, incl. back onto
+                                  # the rebuilt ring when it is alone)
+    rejected_requests: int = 0    # admissions rejected with a structured
+                                  # per-request failure instead of a
+                                  # scheduler RuntimeError (livelock fix)
 
     @property
     def tokens_per_s(self) -> float:
@@ -338,25 +358,11 @@ class LPUEngine:
                         self.kv_prec.scale_itemsize))
             # default pool: dense-equivalent capacity + the null block
             self.num_blocks = num_blocks or (slots * self.table_len + 1)
-            pool = BlockPool(self.num_blocks, self.block_size)
-            store = (None if self.kv_prec.requested == "auto"
-                     else jnp.dtype(self.kv_prec.store_dtype))
-            scale_dt = (jnp.dtype(self.kv_prec.scale_dtype)
-                        if self.kv_prec.quantized else None)
-            self.cache = model.init_cache(
-                slots, max_seq, paged=True, num_blocks=self.num_blocks,
-                block_size=self.block_size, dtype=store,
-                scale_dtype=scale_dt)
-            self.block_tables = np.zeros((slots, self.table_len), np.int32)
         else:
             self.block_size = max_seq
             self.table_len = 1
             self.num_blocks = slots
-            pool = None
-            store = (None if self.kv_prec.requested == "auto"
-                     else jnp.dtype(self.kv_prec.store_dtype))
-            self.cache = model.init_cache(slots, max_seq, dtype=store)
-            self.block_tables = None
+        pool = self._init_kv_state()
         # paged decode dataflow: "stream" runs the Pallas paged kernel
         # straight off the pool (scalar-prefetched block table, no
         # contiguous per-request copy); "gather" keeps the materialized
@@ -428,6 +434,32 @@ class LPUEngine:
                                 else "custom"))
         self.draft_k = int(draft_k)
         self._verify_jits: Dict[tuple, Callable] = {}
+        # fault tolerance: deterministic chaos + the detection seams.
+        # ``ring_id`` is stamped by MultiRingEngine; a standalone engine
+        # is ring 0.  The injector's fired-set lives OUTSIDE the state
+        # reset() rebuilds, so a chaos event fires exactly once per
+        # process even across drain/rebuild cycles.
+        self.ring_id = 0
+        self.events: List[Event] = []
+        self._step_no = 0
+        self._stalled = False
+        self._poison_next = False
+        if c.chaos:
+            chaos_events = parse_chaos(c.chaos)
+            if self.drafter is not None:
+                raise ValueError(
+                    "chaos injection does not compose with speculative "
+                    "decoding yet: the verify path has no finite-logits "
+                    "guard, so a NaN fault could commit tokens")
+            if not self.paged and \
+                    any(e.kind == "corrupt" for e in chaos_events):
+                raise ValueError(
+                    "chaos kind 'corrupt' poisons a KV pool block and "
+                    "needs the paged pool (dense caches have no blocks)")
+            self.injector: Optional[FailureInjector] = \
+                FailureInjector(chaos=chaos_events)
+        else:
+            self.injector = None
         self.sched = Scheduler(slots, max_seq, pool, min_bucket,
                                prefix=self.prefix)
         self.stats = EngineStats()
@@ -447,6 +479,117 @@ class LPUEngine:
         else:
             self._build_mesh_fns()
 
+    def _init_kv_state(self) -> Optional[BlockPool]:
+        """(Re)build the device KV state and its host mirrors from the
+        engine's fixed geometry: a fresh zeroed cache (pool or dense),
+        fresh block tables, and — paged — a fresh :class:`BlockPool`.
+        Called at construction and by :meth:`reset` (ring rebuild)."""
+        store = (None if self.kv_prec.requested == "auto"
+                 else jnp.dtype(self.kv_prec.store_dtype))
+        if self.paged:
+            pool = BlockPool(self.num_blocks, self.block_size)
+            scale_dt = (jnp.dtype(self.kv_prec.scale_dtype)
+                        if self.kv_prec.quantized else None)
+            self.cache = self.model.init_cache(
+                self.slots, self.max_seq, paged=True,
+                num_blocks=self.num_blocks, block_size=self.block_size,
+                dtype=store, scale_dtype=scale_dt)
+            self.block_tables = np.zeros((self.slots, self.table_len),
+                                         np.int32)
+        else:
+            pool = None
+            self.cache = self.model.init_cache(self.slots, self.max_seq,
+                                               dtype=store)
+            self.block_tables = None
+        return pool
+
+    def reset(self) -> List[Request]:
+        """Drain this ring: drop every KV block, table and scheduling
+        structure and rebuild them empty — the rebuild half of a ring
+        drain/rebuild cycle.  Returns the orphaned in-flight requests
+        (active sequences first, in admission order, then the queue) for
+        the supervisor to migrate via the recompute-resume path
+        (:meth:`Request.resume_tokens`).
+
+        Finished results, stats, traced jits and the chaos injector's
+        fired-set all survive: a rebuilt ring re-enters rotation without
+        retracing a single program and without replaying chaos events.
+        """
+        orphans = [s.req for s in
+                   sorted((s for s in self.sched.active if s is not None),
+                          key=lambda s: s.admit_seq)]
+        orphans += list(self.sched.queue)
+        pool = self._init_kv_state()
+        if self.mesh is not None:
+            self.cache = jax.device_put(self.cache, self._cache_named)
+        self.prefix = (PrefixCache(pool)
+                       if (self.paged and self.prefix is not None)
+                       else None)
+        self.sched = Scheduler(self.slots, self.max_seq, pool,
+                               self.config.min_bucket, prefix=self.prefix)
+        self._chunk_rr = -1
+        self._stalled = False
+        self._poison_next = False
+        return orphans
+
+    def check_pool_balanced(self) -> None:
+        """Raise unless every pool block's refcount balances to zero
+        (post-drain invariant; see
+        :func:`repro.serving.kv_cache.assert_pool_balanced`)."""
+        if self.sched.pool is not None:
+            assert_pool_balanced(self.sched.pool, self.prefix)
+
+    # -- chaos injection + detection (serving fault tolerance) ---------
+
+    def _chaos_tick(self) -> None:
+        """Fire this step's configured chaos events (exactly once each).
+
+        ``ring`` raises :class:`RingFailure` outright; ``stall`` wedges
+        the engine (no progress until the supervisor's heartbeat timeout
+        drains it); ``nan`` poisons the next decode program's logits on
+        device; ``corrupt`` overwrites a resident pool block with NaN —
+        both of the latter are then *detected* by the finite-logits
+        guard, never trusted to be benign.
+        """
+        if self.injector is None:
+            return
+        for ev in self.injector.fire(self._step_no, self.ring_id):
+            self.events.append(Event("chaos", self._step_no,
+                                     {"kind": ev.kind,
+                                      "ring": self.ring_id}))
+            if ev.kind == "ring":
+                raise RingFailure("injected_ring_failure", self._step_no,
+                                  self.ring_id)
+            if ev.kind == "stall":
+                self._stalled = True
+            elif ev.kind == "nan":
+                self._poison_next = True
+            elif ev.kind == "corrupt":
+                self._corrupt_pool_block()
+
+    def _corrupt_pool_block(self) -> None:
+        """Overwrite the first decode-ready sequence's first resident
+        block with NaN across every floating cache leaf (a quantized
+        pool is poisoned through its scale side-arrays).  The fault then
+        surfaces exactly the way a real memory fault would: the next
+        decode program's logits go non-finite and the guard fires."""
+        blk = None
+        for seq in self.sched.active:
+            if seq is not None and not seq.prefilling and seq.blocks:
+                blk = seq.blocks[0]
+                break
+        if blk is None:
+            return                   # nothing resident: fault lands on air
+        bad = jnp.int32(blk)
+
+        def poison(pg):
+            if jnp.issubdtype(pg.dtype, jnp.floating):
+                return pg.at[:, bad].set(jnp.nan)
+            return pg
+        self.cache = jax.tree.map(poison, self.cache)
+        if self.mesh is not None:
+            self.cache = jax.device_put(self.cache, self._cache_named)
+
     # -- jitted steps --------------------------------------------------
 
     def _decode_fn(self, params, cache, tokens, positions, tables):
@@ -458,7 +601,7 @@ class LPUEngine:
         return logits[:, -1], new_cache
 
     def _window_fn(self, S, params, cache, tables, last, pos, n_out,
-                   alive, rng, temps, top_ks, top_ps, max_new):
+                   alive, rng, temps, top_ks, top_ps, max_new, poison):
         """``S`` fused decode steps in ONE jitted program (lax.scan).
 
         Each scan step runs the forward, samples every slot in-jit
@@ -470,8 +613,14 @@ class LPUEngine:
         (last, pos) stop advancing, so subsequent steps rewrite the
         same KV entry with the same value (idempotent don't-care work,
         like the null-block writes of idle slots).  The host reads back
-        only the (S, slots) int32 token matrix and discards the frozen
-        slots' overrun tokens during reconciliation.
+        only the (S, slots) int32 token matrix plus an (S, slots) bool
+        **finite-logits flag** per sampled row (the fault-tolerance NaN
+        guard: O(slots) extra bytes, never the vocab row) and discards
+        the frozen slots' overrun tokens during reconciliation.
+
+        ``poison`` is the chaos seam: a traced bool that overwrites the
+        sampled-from logits rows with NaN, so the guard is exercised by
+        a fault that genuinely happens on device.
         """
         eos = jnp.int32(-1 if self.eos_id is None else self.eos_id)
         axis, tp = self.env.model, self.tp
@@ -483,8 +632,15 @@ class LPUEngine:
                 positions=pos, cache=cache, block_tables=tables,
                 paged_kernel=self.paged_kernel or "gather",
                 block_s=self.block_s)
+            row = logits[:, -1]
+            row = jnp.where(poison, jnp.full_like(row, jnp.nan), row)
+            # NaN guard: each rank checks its vocab shard; under tp the
+            # verdict must agree ring-wide, so AND via psum
+            ok = jnp.isfinite(row).all(axis=-1)
+            if tp > 1:
+                ok = lax.psum(ok.astype(jnp.int32), axis) == tp
             toks, rng = sample_sharded_batched(
-                logits[:, -1], rng, temps, top_ks, top_ps, alive, axis,
+                row, rng, temps, top_ks, top_ps, alive, axis,
                 tp)
             live = alive.astype(jnp.int32)
             n_out = n_out + live
@@ -493,11 +649,12 @@ class LPUEngine:
                 (pos >= self.max_seq - 1)
             last = jnp.where(alive, toks, last)
             alive = alive & ~fin
-            return (cache, last, pos, n_out, alive, rng), toks
+            return (cache, last, pos, n_out, alive, rng), (toks, ok)
 
-        (cache, last, pos, n_out, alive, rng), tok_mat = lax.scan(
-            one, (cache, last, pos, n_out, alive, rng), None, length=S)
-        return tok_mat, cache, last, pos, n_out, alive, rng
+        (cache, last, pos, n_out, alive, rng), (tok_mat, ok_mat) = \
+            lax.scan(one, (cache, last, pos, n_out, alive, rng), None,
+                     length=S)
+        return tok_mat, ok_mat, cache, last, pos, n_out, alive, rng
 
     def _window(self, S: int) -> Callable:
         """The jitted ``S``-step fused window (one trace per S)."""
@@ -631,6 +788,7 @@ class LPUEngine:
                                         kv_quant=self.kv_prec.quantized)
         self._mesh_specs = (specs, cspecs)
         cspecs_named = self._named(cspecs)
+        self._cache_named = cspecs_named     # reset() re-places with this
         self.cache = jax.device_put(self.cache, cspecs_named)
         pf_cspecs = self.model.cache_specs(self.env1)
         self._pf_named = self._named(pf_cspecs)
@@ -716,27 +874,30 @@ class LPUEngine:
         mesh = self.mesh
         specs, cspecs = self._mesh_specs
         rep = P(None)
-        out_specs = (P(None, None), cspecs) + (rep,) * 5
+        # tok_mat + the NaN-guard ok_mat come out replicated (the psum
+        # inside _window_fn makes the per-rank verdicts agree)
+        out_specs = (P(None, None), P(None, None), cspecs) + (rep,) * 5
 
         if self.paged:
             def win(params, cache, tables, last, pos, n_out, alive, rng,
-                    temps, top_ks, top_ps, max_new):
+                    temps, top_ks, top_ps, max_new, poison):
                 return self._window_fn(S, params, cache, tables, last,
                                        pos, n_out, alive, rng, temps,
-                                       top_ks, top_ps, max_new)
+                                       top_ks, top_ps, max_new, poison)
             return jax.jit(shard_map(
                 win, mesh=mesh,
-                in_specs=(specs, cspecs, P(None, None)) + (rep,) * 9,
+                in_specs=(specs, cspecs, P(None, None)) + (rep,) * 9
+                + (P(),),
                 out_specs=out_specs, check_vma=False))
 
         def win_d(params, cache, last, pos, n_out, alive, rng,
-                  temps, top_ks, top_ps, max_new):
+                  temps, top_ks, top_ps, max_new, poison):
             return self._window_fn(S, params, cache, None, last, pos,
                                    n_out, alive, rng, temps, top_ks,
-                                   top_ps, max_new)
+                                   top_ps, max_new, poison)
         sm = jax.jit(shard_map(
             win_d, mesh=mesh,
-            in_specs=(specs, cspecs) + (rep,) * 9,
+            in_specs=(specs, cspecs) + (rep,) * 9 + (P(),),
             out_specs=out_specs, check_vma=False))
 
         def drop_tables(params, cache, tables, *rest):
@@ -1099,6 +1260,13 @@ class LPUEngine:
             self.stats.wall += time.time() - t0
 
     def _step(self) -> List[Request]:
+        self._step_no += 1
+        self._chaos_tick()
+        if self._stalled:
+            # injected stall: the ring makes no progress this step (and
+            # every later one) — the fleet's heartbeat tracker is what
+            # notices and drains it.
+            return []
         finished: List[Request] = []
         if self.prefill_chunk:
             finished += self._admit_and_chunk()
@@ -1110,6 +1278,7 @@ class LPUEngine:
                 done = self._do_prefill(seq)
                 if done is not None:
                     finished.append(done)
+        finished += self._harvest_rejections()
         self.sched.ensure_decode_capacity()     # may preempt (recompute)
         self.stats.preemptions = self.sched.preemptions
         if self.sched.pool is not None:
@@ -1130,6 +1299,23 @@ class LPUEngine:
         else:
             finished += self._host_decode_step()
         self.stats.prefill_traces = len(self._buckets_traced)
+        return finished
+
+    def _harvest_rejections(self) -> List[Request]:
+        """Surface scheduler admission rejections (request can NEVER
+        fit, e.g. needs more blocks than the whole pool) as structured
+        per-request failures instead of the historical engine-crashing
+        ``RuntimeError`` — see Scheduler.take_rejected()."""
+        finished: List[Request] = []
+        for req, why in self.sched.take_rejected():
+            req.done = True
+            req.failed = True
+            req.error = why
+            self._results[req.rid] = req.out
+            self.stats.rejected_requests += 1
+            self.events.append(Event("request_rejected", self._step_no,
+                                     {"rid": req.rid, "why": why}))
+            finished.append(req)
         return finished
 
     # -- host-sampled decode (the pre-fusion baseline) -----------------
@@ -1153,6 +1339,19 @@ class LPUEngine:
         logits_np = np.asarray(logits)
         self.stats.host_syncs += 1
         self.stats.bytes_to_host += logits_np.nbytes
+        if self._poison_next:
+            # chaos "nan": corrupt the host copy (asarray may alias a
+            # read-only device buffer) so the guard below trips.
+            self._poison_next = False
+            logits_np = np.array(logits_np)
+            logits_np[:] = np.nan
+        act = [slot for slot, seq in enumerate(self.sched.active)
+               if seq is not None and not seq.prefilling]
+        if act and not np.isfinite(logits_np[act]).all():
+            bad = [slot for slot in act
+                   if not np.isfinite(logits_np[slot]).all()]
+            raise RingFailure("nan_logits", self._step_no, self.ring_id,
+                              {"slots": bad})
 
         finished: List[Request] = []
         self.stats.steps += 1
@@ -1235,14 +1434,20 @@ class LPUEngine:
 
     def _dispatch_window(self, win: int, carry: tuple, samp: tuple):
         """Launch one fused window (non-blocking: jax dispatch is async).
-        Returns ((win, token matrix, active snapshot), device carry)."""
+        Returns ((win, token matrix, ok matrix, active snapshot),
+        device carry).  Consumes a pending chaos ``nan`` event: the
+        poison flag rides into the program as a traced bool, so the
+        fault happens on device and only the guard can catch it."""
         tables = (jnp.asarray(self.block_tables) if self.paged else None)
+        poison = np.bool_(self._poison_next)
+        self._poison_next = False
         out = self._window(win)(self.params, self.cache, tables, *carry,
-                                self.rng, *samp)
-        tok_mat, self.cache, last, pos, n_out, alive, self.rng = out
+                                self.rng, *samp, poison)
+        tok_mat, ok_mat, self.cache, last, pos, n_out, alive, self.rng \
+            = out
         snapshot = [s is not None and not s.prefilling
                     for s in self.sched.active]
-        return (win, tok_mat, snapshot), (last, pos, n_out, alive)
+        return (win, tok_mat, ok_mat, snapshot), (last, pos, n_out, alive)
 
     def _reconcile(self, handle) -> List[Request]:
         """Block on a window's token matrix (the ONE device->host sync
@@ -1250,13 +1455,27 @@ class LPUEngine:
         applied: tokens of slots that finished earlier in the window —
         or in a previously reconciled window — are overrun and
         discarded; everything else appends exactly as the single-step
-        loop would."""
-        win, tok_mat, dispatch_active = handle
+        loop would.
+
+        The NaN guard runs per window step BEFORE that step's tokens
+        commit: the first step whose sampled-from row went non-finite
+        for any dispatched slot raises :class:`RingFailure` — tokens of
+        earlier (finite) steps are already committed, tokens at or
+        after the fault never reach a request, so a recovered stream
+        can be bit-identical to a fault-free run."""
+        win, tok_mat, ok_mat, dispatch_active = handle
         toks = np.asarray(tok_mat)                     # (win, slots)
+        oks = np.asarray(ok_mat)                       # (win, slots) bool
         self.stats.host_syncs += 1
-        self.stats.bytes_to_host += toks.nbytes
+        self.stats.bytes_to_host += toks.nbytes + oks.nbytes
         finished: List[Request] = []
         for s in range(win):
+            bad = [slot for slot in range(self.slots)
+                   if dispatch_active[slot] and not oks[s, slot]]
+            if bad:
+                raise RingFailure(
+                    "nan_logits", self._step_no, self.ring_id,
+                    {"window_step": s, "slots": bad})
             if self.sched.num_decoding() == 0:
                 self.stats.overrun_tokens += \
                     (win - s) * sum(dispatch_active)
@@ -1534,7 +1753,8 @@ class LPUEngine:
                                       tables).as_text()
         carry, samp = self._slot_state()
         return self._window(1).lower(self.params, self.cache, tables,
-                                     *carry, self.rng, *samp).as_text()
+                                     *carry, self.rng, *samp,
+                                     np.bool_(False)).as_text()
 
 
 class MultiRingEngine:
@@ -1562,22 +1782,75 @@ class MultiRingEngine:
     driver per sub-ring.  Throughput accounting must therefore use
     total tokens over fleet wall time, never the sum of per-ring rates
     (see ``benchmarks/serving_bench.py``).
+
+    Fault tolerance (docs/serving.md §Fault tolerance): ``step()``
+    supervises the rings.  A :class:`repro.serving.ft.RingFailure`
+    raised by any engine (chaos-injected or detected by the NaN guard)
+    — or a ring that stops making progress past the heartbeat timeout —
+    triggers the recovery cycle: drain the ring
+    (:meth:`LPUEngine.reset` returns its orphaned requests and rebuilds
+    the KV pool / prefix cache / scheduler from scratch), migrate the
+    orphans to surviving rings through the recompute-resume path
+    (``Request.resume_tokens``), and return the rebuilt ring to
+    rotation (:meth:`HeartbeatTracker.revive`).  Migrations are bounded
+    by ``EngineConfig.max_migrations``; a request that exhausts them
+    surfaces ``failed=True`` + ``error`` instead of crashing the fleet.
+
+    Host-fleet mode (``mesh=None, rings=N``) builds N single-device
+    engines over the same host backend — no ring parallelism, but the
+    full supervision/recovery machinery, which is how the chaos tests
+    and serving_bench exercise it without a multi-device mesh.
     """
 
-    def __init__(self, model, params, mesh, *, ring_size: int,
-                 config: Optional[EngineConfig] = None, **engine_kw):
-        total = mesh.devices.shape[-1]
-        self.ring_cfg = reconfigure(total, ring_size)
-        assert self.ring_cfg.validate_disjoint()
-        assert model.plan.tp == ring_size, \
-            (f"model planned for tp={model.plan.tp}, "
-             f"ring_size={ring_size}")
-        self.engines = [LPUEngine(model, params, config, mesh=sub,
-                                  **engine_kw)
-                        for sub in submeshes(mesh, ring_size)]
+    def __init__(self, model, params, mesh=None, *, ring_size: int = 0,
+                 rings: int = 0, config: Optional[EngineConfig] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 step_prior_s: float = 0.0, **engine_kw):
+        if mesh is not None:
+            if ring_size < 1:
+                raise ValueError("mesh fleets need ring_size >= 1")
+            total = mesh.devices.shape[-1]
+            self.ring_cfg = reconfigure(total, ring_size)
+            assert self.ring_cfg.validate_disjoint()
+            assert model.plan.tp == ring_size, \
+                (f"model planned for tp={model.plan.tp}, "
+                 f"ring_size={ring_size}")
+            self.engines = [LPUEngine(model, params, config, mesh=sub,
+                                      **engine_kw)
+                            for sub in submeshes(mesh, ring_size)]
+        else:
+            if rings < 1:
+                raise ValueError("host fleets need rings >= 1")
+            if model.plan.mesh_axes is not None:
+                raise ValueError(
+                    "host-fleet mode needs a mesh-free plan "
+                    f"(got mesh_axes={model.plan.mesh_axes})")
+            self.ring_cfg = None
+            self.engines = [LPUEngine(model, params, config, **engine_kw)
+                            for _ in range(rings)]
+        for i, eng in enumerate(self.engines):
+            eng.ring_id = i
         self.router = RingRouter(len(self.engines))
         self.ring_of: Dict[int, int] = {}
         self._rid = 0
+        # -- supervision state (see class docstring) -------------------
+        c = self.engines[0].config
+        self.max_migrations = c.max_migrations
+        chaotic = any(e.injector is not None for e in self.engines)
+        # chaos runs default to a virtual clock (1 fleet round = 1 s)
+        # so heartbeat timeouts are step-deterministic, never wall time
+        self._clock = clock or (ManualClock() if chaotic else time.time)
+        self.round_dt = 1.0
+        self.hb = HeartbeatTracker(len(self.engines),
+                                   timeout_s=c.heartbeat_timeout_s,
+                                   clock=self._clock)
+        self.monitors = [StragglerMonitor(mu0=step_prior_s or None)
+                         for _ in self.engines]
+        self.ft_straggler_drain = c.ft_straggler_drain
+        self.events: List[Event] = []
+        self._migrations: Dict[int, int] = {}   # rid -> resubmit count
+        self.failed: Dict[int, Request] = {}    # rid -> failed request
+        self._round = 0
 
     @property
     def n_rings(self) -> int:
@@ -1597,12 +1870,92 @@ class MultiRingEngine:
         return req.rid
 
     def step(self) -> List[Request]:
-        """One round on every sub-ring that has work."""
+        """One supervised round on every sub-ring that has work.
+
+        Idle rings heartbeat for free; a working ring beats only when
+        its round made progress (finished a step or a prefill, or ran
+        out of work), so a wedged ring goes silent and the timeout
+        check at the end of the round eventually drains it."""
+        self._round += 1
         done: List[Request] = []
-        for eng in self.engines:
-            if eng.sched.has_work():
+        for i, eng in enumerate(self.engines):
+            if not eng.sched.has_work():
+                self.hb.beat(i)
+                continue
+            before = eng.stats.steps + eng.stats.prefills
+            t0 = time.perf_counter()
+            try:
                 done.extend(eng.step())
+            except RingFailure as f:
+                done.extend(
+                    self._on_ring_failure(i, f.reason, dict(f.detail)))
+                continue
+            ev = self.monitors[i].record(self._round,
+                                         time.perf_counter() - t0)
+            if ev is not None:
+                self.events.append(Event("straggler", self._round,
+                                         {"ring": i, **ev.detail}))
+                if self.ft_straggler_drain:
+                    done.extend(self._on_ring_failure(
+                        i, "straggler", dict(ev.detail)))
+                    continue
+            progressed = (eng.stats.steps + eng.stats.prefills) > before \
+                or not eng.sched.has_work()
+            if progressed:
+                self.hb.beat(i)
+        if isinstance(self._clock, ManualClock):
+            self._clock.advance(self.round_dt)
+        for i in self.hb.check():
+            done.extend(self._on_ring_failure(
+                i, "heartbeat_timeout",
+                {"timeout_s": self.hb.timeout}))
         return done
+
+    def _on_ring_failure(self, i: int, reason: str,
+                         detail: dict) -> List[Request]:
+        """Drain -> migrate -> rebuild one ring.  Returns the requests
+        that exhausted their migration budget (terminally failed)."""
+        eng = self.engines[i]
+        eng.stats.ring_failures += 1
+        self.events.append(Event("ring_failed", self._round,
+                                 {"ring": i, "reason": reason, **detail}))
+        orphans = eng.reset()
+        self.hb.revive(i)
+        self.events.append(Event("ring_rebuilt", self._round,
+                                 {"ring": i, "orphans": len(orphans)}))
+        failed: List[Request] = []
+        for req in orphans:
+            got = self._migrate(req, i)
+            if got is not None:
+                failed.append(got)
+        return failed
+
+    def _migrate(self, req: Request, source: int) -> Optional[Request]:
+        """Resubmit one orphaned request through the recompute-resume
+        path, preferring a surviving ring.  Returns the request if its
+        retry budget is exhausted (now a structured failure), else
+        None."""
+        n = self._migrations.get(req.rid, 0)
+        if n >= self.max_migrations:
+            req.done = True
+            req.failed = True
+            req.error = (f"retries exhausted: migrated {n}x "
+                         f"(max_migrations={self.max_migrations})")
+            self.failed[req.rid] = req
+            self.events.append(Event("request_failed", self._round,
+                                     {"rid": req.rid, "migrations": n}))
+            return req
+        self._migrations[req.rid] = n + 1
+        others = [j for j in range(len(self.engines)) if j != source]
+        pool = others or [source]
+        ring = min(pool, key=lambda j: (self.engines[j].pending_load(), j))
+        tgt = self.engines[ring]
+        tgt.submit(req)
+        self.ring_of[req.rid] = ring
+        tgt.stats.retries += 1
+        if ring != source:
+            tgt.stats.migrated_requests += 1
+        return None
 
     def has_work(self) -> bool:
         return any(e.sched.has_work() for e in self.engines)
@@ -1613,6 +1966,11 @@ class MultiRingEngine:
         out: Dict[int, List[int]] = {}
         for eng in self.engines:
             out.update(eng.drain())
+        # failed requests surface their partial streams, same contract
+        # as per-engine rejection — callers check Request.failed/error
+        # (the fleet keeps the Request itself in ``self.failed``)
+        for rid, req in self.failed.items():
+            out[rid] = req.out
         return out
 
     def generate(self, prompts: Sequence[Sequence[int]],
@@ -1626,3 +1984,17 @@ class MultiRingEngine:
 
     def per_ring_stats(self) -> List[EngineStats]:
         return [e.stats for e in self.engines]
+
+    def fleet_counters(self) -> Dict[str, int]:
+        """Aggregate FT counters across the fleet (banner + bench)."""
+        stats = self.per_ring_stats()
+        return {
+            "ring_failures": sum(s.ring_failures for s in stats),
+            "migrated_requests": sum(s.migrated_requests for s in stats),
+            "retries": sum(s.retries for s in stats),
+            "rejected_requests": sum(s.rejected_requests for s in stats),
+            "failed_requests": len(self.failed),
+            "submitted": self._rid,
+            "events": len(self.events)
+                + sum(len(e.events) for e in self.engines),
+        }

@@ -205,6 +205,34 @@ class BlockPool:
         return self.num_used * bytes_per_block
 
 
+def assert_pool_balanced(pool: BlockPool,
+                         prefix: Optional["PrefixCache"] = None) -> None:
+    """Refcount-balance invariant after a full drain (zero live requests).
+
+    Every block's refcount must be zero (cached blocks park in the LRU
+    at refcount zero, so this holds for them too) and the free + LRU
+    lists must account for every non-null block.  With a prefix cache,
+    every index entry must point at an LRU-parked block.  Raises
+    ``AssertionError`` naming the leaked block ids — the gate the
+    fault-tolerance tests and serving_bench's chaos row hold after a
+    ring drain/rebuild cycle (a rebuild that leaked references would
+    silently shrink the pool every failure).
+    """
+    leaked = [b for b in range(1, pool.num_blocks) if pool.ref[b] != 0]
+    if leaked:
+        raise AssertionError(
+            f"leaked blocks (nonzero refcount after drain): {leaked}")
+    if pool.num_used != 0:
+        raise AssertionError(
+            f"pool accounting imbalance: {pool.num_used} blocks used "
+            "after drain (free + LRU lists lost track of them)")
+    if prefix is not None:
+        stray = [b for b in prefix._by_block if b not in pool._lru]
+        if stray:
+            raise AssertionError(
+                f"prefix index entries for non-parked blocks: {stray}")
+
+
 # ---------------------------------------------------------------------------
 # prefix cache: block-aligned hash index over token prefixes
 # ---------------------------------------------------------------------------

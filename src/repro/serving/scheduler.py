@@ -38,7 +38,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Sequence
+from typing import Deque, List, Optional, Sequence, Tuple
 
 from repro.serving.kv_cache import (BlockPool, PrefixCache, blocks_for,
                                     bucket_for)
@@ -98,6 +98,13 @@ class Scheduler:
         self.active: List[Optional[SeqSlot]] = [None] * slots
         self.preemptions = 0
         self._admit_counter = 0
+        # requests that can NEVER be admitted (their resume state
+        # outgrew the pool): popped off the queue with a reason instead
+        # of raising — one oversized request must not take down the
+        # co-tenants sharing this engine.  The engine harvests these
+        # via :meth:`take_rejected` and surfaces a structured
+        # per-request failure.
+        self.rejected: List[Tuple[object, str]] = []
 
     # -- queries ----------------------------------------------------------
 
@@ -156,58 +163,77 @@ class Scheduler:
         blocks are allocated; on shortfall the pin is rolled back and
         the request waits as usual.
 
+        A queue head that can never fit — the whole pool is free yet
+        still short of its resume-state blocks — is **rejected**, not
+        raised over: it is popped into :attr:`rejected` with a reason
+        and the next queued request gets its chance in the same call,
+        so one oversized request can neither livelock admission nor
+        kill the engine its co-tenants share (the engine turns the
+        rejection into a structured per-request failure).
+
         Returns the newly filled SeqSlot (prefill is the engine's job)
         or None when nothing can be admitted right now.
         """
-        if not self.queue:
-            return None
-        free_slot = next((i for i, s in enumerate(self.active)
-                          if s is None), None)
-        if free_slot is None:
-            return None
-        req = self.queue[0]
-        tokens = req.resume_tokens()
-        n_tok = len(tokens)
-        blocks: List[int] = []
-        shared: List[int] = []
-        cached = 0
-        if self.pool is not None:
-            if self.prefix is not None:
-                shared, cached = self.prefix.match(tokens)
-                if shared:
-                    self.pool.share(shared)
-            reserve = min(n_tok, cached + chunk) if chunk else n_tok
-            need = blocks_for(reserve, self.pool.block_size) - len(shared)
-            got = self.pool.alloc(max(need, 0))
-            if got is None:
-                if shared:
-                    self.pool.free(shared)        # unpin; blocks return
+        while self.queue:
+            free_slot = next((i for i, s in enumerate(self.active)
+                              if s is None), None)
+            if free_slot is None:
+                return None
+            req = self.queue[0]
+            tokens = req.resume_tokens()
+            n_tok = len(tokens)
+            blocks: List[int] = []
+            shared: List[int] = []
+            cached = 0
+            if self.pool is not None:
+                if self.prefix is not None:
+                    shared, cached = self.prefix.match(tokens)
+                    if shared:
+                        self.pool.share(shared)
+                reserve = min(n_tok, cached + chunk) if chunk else n_tok
+                need = blocks_for(reserve, self.pool.block_size) \
+                    - len(shared)
+                got = self.pool.alloc(max(need, 0))
+                if got is None:
+                    if shared:
+                        self.pool.free(shared)    # unpin; blocks return
                                                   # to the LRU, index kept
-                if self.num_active() == 0 and \
-                        self.pool.num_used == 0:
-                    # whole pool free yet still short: this request can
-                    # never be admitted (its resume state outgrew the
-                    # pool after preemption) — fail loudly, don't livelock
-                    raise RuntimeError(
-                        f"request {getattr(req, 'rid', '?')} needs "
-                        f"{blocks_for(reserve, self.pool.block_size)} "
-                        f"blocks but the pool holds only "
-                        f"{self.pool.num_blocks - 1}; increase num_blocks")
-                return None          # pool pressure: wait for finishes
-            blocks = shared + got
-            if shared:
-                self.prefix.note_hit(shared, cached)
-        self.queue.popleft()
-        seq = SeqSlot(req=req, pos=cached if chunk else n_tok,
-                      blocks=blocks,
-                      admit_seq=self._admit_counter,
-                      resumed=bool(req.out),
-                      prefilled=cached if chunk else 0,
-                      prefill_target=n_tok if chunk else 0,
-                      cached=cached)
-        self._admit_counter += 1
-        self.active[free_slot] = seq
-        return seq
+                    if self.num_active() == 0 and \
+                            self.pool.num_used == 0:
+                        # whole pool free yet still short: this request
+                        # can never be admitted (its resume state
+                        # outgrew the pool after preemption) — reject
+                        # it and move on to the next queued request
+                        self.queue.popleft()
+                        self.rejected.append((req, (
+                            f"needs "
+                            f"{blocks_for(reserve, self.pool.block_size)}"
+                            f" blocks but the pool holds only "
+                            f"{self.pool.num_blocks - 1}; increase "
+                            f"num_blocks")))
+                        continue
+                    return None      # pool pressure: wait for finishes
+                blocks = shared + got
+                if shared:
+                    self.prefix.note_hit(shared, cached)
+            self.queue.popleft()
+            seq = SeqSlot(req=req, pos=cached if chunk else n_tok,
+                          blocks=blocks,
+                          admit_seq=self._admit_counter,
+                          resumed=bool(req.out),
+                          prefilled=cached if chunk else 0,
+                          prefill_target=n_tok if chunk else 0,
+                          cached=cached)
+            self._admit_counter += 1
+            self.active[free_slot] = seq
+            return seq
+        return None
+
+    def take_rejected(self) -> List[Tuple[object, str]]:
+        """Hand off (request, reason) pairs rejected since the last
+        call — exactly once, like the engine's results buffer."""
+        out, self.rejected = self.rejected, []
+        return out
 
     def slot_of(self, seq: SeqSlot) -> int:
         return self.active.index(seq)

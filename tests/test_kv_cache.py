@@ -222,9 +222,10 @@ def test_engine_prompt_longer_than_pool_rejected(tiny_model):
         eng.submit(list(range(1, 30)), max_new_tokens=4)
 
 
-def test_scheduler_impossible_resume_raises():
-    """A preempted request whose resume state outgrew the pool must fail
-    loudly instead of livelocking the admission loop."""
+def test_scheduler_impossible_resume_rejected():
+    """A preempted request whose resume state outgrew the pool must be
+    popped with a structured reason instead of livelocking the admission
+    loop (or crashing the whole engine over one doomed request)."""
     from repro.serving.scheduler import Scheduler
 
     class FakeReq:
@@ -237,8 +238,11 @@ def test_scheduler_impossible_resume_raises():
 
     sched = Scheduler(2, 64, BlockPool(4, 8))     # 3 usable blocks
     sched.queue.append(FakeReq())                 # as if re-queued
-    with pytest.raises(RuntimeError):
-        sched.admit_next()
+    assert sched.admit_next() is None             # no crash, no livelock
+    rejected = sched.take_rejected()
+    assert len(rejected) == 1 and rejected[0][0].rid == 0
+    assert "blocks" in rejected[0][1]
+    assert not sched.queue                        # popped, not spun on
 
 
 def test_paged_pool_smaller_than_dense(tiny_model):
