@@ -321,6 +321,258 @@ def chaos_section(model, params, prompts, max_new, fleet_kw):
     return sec
 
 
+def tail_latency_section(cfg, model, params, args, tracker_path):
+    """Tail-latency harness (the async front-end's latency claims): ONE
+    deterministic bursty multi-tenant trace (benchmarks/traces.py —
+    Pareto gaps, two tenants sharing block-aligned system prefixes)
+    replayed through :class:`AsyncFrontend` four times, reporting
+    p50/p99 TTFT and ms/token per row:
+
+    * ``tail-affinity-off`` vs ``tail-affinity-on`` — a mesh-free
+      2-ring fleet with prefix caching; OFF routes least-loaded, ON
+      routes each request to the ring whose PrefixCache owns the
+      deepest prefix of its prompt.  Gates: the token streams are
+      bit-identical (routing never changes greedy content) and the ON
+      run's fleet-wide prefix hit rate >= the OFF run's — same trace,
+      same engines, the only variable is the router.
+    * ``tail-budget-off`` vs ``tail-budget-on`` — a single
+      chunked-prefill engine; ON re-plans ``prefill_chunk`` /
+      ``steps_per_sync`` every pump tick from the step-time EWMA
+      (seeded by the analytic ``step_time_prior``).  Gate: bit-identical
+      streams — SLO retuning changes WHEN tokens reconcile, never WHICH
+      tokens — while the planner demonstrably ran (plans recorded,
+      windows observed).
+
+    Every run's telemetry (per-window EngineStats deltas + per-request
+    TTFT/ms-per-token records) streams through one schema-validating
+    :class:`JsonlTracker` artifact at ``tracker_path`` — the file CI's
+    tail-latency-smoke leg uploads — plus a per-run ring buffer that
+    feeds the percentiles.  ``read_jsonl`` re-validates the artifact
+    and every run's admission ledger must balance:
+    ``completed + failed + cancelled == submitted``.
+    """
+    import asyncio
+
+    import traces as tr
+    from repro.core.latency_model import LPU_FPGA, step_time_prior
+    from repro.serving.budget import BudgetScheduler
+    from repro.serving.frontend import AsyncFrontend, serve_trace
+    from repro.serving.tracker import (JsonlTracker, RingBufferTracker,
+                                       read_jsonl)
+
+    class _SectionSink:
+        """Fan log() to the shared artifact + a per-run buffer, but
+        swallow finish(): each frontend's stop() flushes its tracker,
+        and the jsonl artifact must outlive all four runs."""
+
+        def __init__(self, *sinks):
+            self.sinks = sinks
+
+        def log(self, rec):
+            for s in self.sinks:
+                s.log(rec)
+
+        def finish(self):
+            pass
+
+    tcfg = tr.TraceConfig(seed=7, requests=args.requests, tenants=2,
+                          arrival="pareto", rate_rps=200.0,
+                          prefix_len=2 * args.block_size, tail_max=12,
+                          max_new_min=4, max_new_max=args.max_new)
+    trace = tr.generate_trace(tcfg)
+    table_len = args.max_seq // args.block_size
+    pool = args.slots * table_len + 1      # dense-equivalent + null
+    jsonl = JsonlTracker(tracker_path)
+
+    def pct(vals, q):
+        return (round(float(np.percentile(np.asarray(vals, np.float64),
+                                          q)), 3) if vals else -1.0)
+
+    def run(mode, target, budget=None):
+        sink = RingBufferTracker(65536)
+        fleet = isinstance(target, MultiRingEngine)
+
+        async def go():
+            async with AsyncFrontend(target, budget=budget,
+                                     tracker=_SectionSink(jsonl,
+                                                          sink)) as fe:
+                streams = await serve_trace(fe, trace)
+            return fe, streams
+
+        fe, streams = asyncio.run(go())
+        outs = [s.tokens for s in streams]
+        c = fe.counters
+        assert c["completed"] + c["failed"] + c["cancelled"] \
+            == c["submitted"] == len(trace), \
+            (mode, c, "tail run lost requests: ledger unbalanced")
+        for eng in fe.engines:
+            eng.check_pool_balanced()       # zero leaked blocks
+        reqs = [r for r in sink.records() if r["kind"] == "request"]
+        ttft = [r["ttft_ms"] for r in reqs if r["ttft_ms"] >= 0]
+        mpt = [r["ms_per_token"] for r in reqs if r["tokens"] >= 2]
+        hits = sum(e.stats.prefix_hits for e in fe.engines)
+        looks = sum(e.stats.prefix_lookups for e in fe.engines)
+        row = {
+            "mode": mode,
+            "completed": c["completed"], "failed": c["failed"],
+            "cancelled": c["cancelled"], "rejected": c["rejected"],
+            "ttft_ms_p50": pct(ttft, 50), "ttft_ms_p99": pct(ttft, 99),
+            "ms_per_token_p50": pct(mpt, 50),
+            "ms_per_token_p99": pct(mpt, 99),
+            "prefix_hits": hits, "prefix_lookups": looks,
+            "prefix_hit_rate": round(hits / max(looks, 1), 3),
+            "affinity_routed": (sum(target.router.affinity_routed)
+                                if fleet else 0),
+            "window_records": sum(1 for r in sink.records()
+                                  if r["kind"] == "engine_window"),
+            "request_records": len(reqs),
+        }
+        return row, outs
+
+    # -- affinity contrast: 2-ring prefix-cache fleet, routing only ----
+    fleet_kw = dict(slots=args.slots, max_seq=args.max_seq, paged=True,
+                    block_size=args.block_size, num_blocks=pool,
+                    prefix_cache=True)
+    aff_off_row, aff_off_outs = run(
+        "tail-affinity-off",
+        MultiRingEngine(model, params, None, rings=2,
+                        config=EngineConfig(affinity="least_loaded",
+                                            **fleet_kw)))
+    aff_on_row, aff_on_outs = run(
+        "tail-affinity-on",
+        MultiRingEngine(model, params, None, rings=2,
+                        config=EngineConfig(affinity="prefix",
+                                            **fleet_kw)))
+    assert aff_on_outs == aff_off_outs, \
+        "affinity routing changed greedy token streams"
+    assert aff_on_row["prefix_hit_rate"] >= \
+        aff_off_row["prefix_hit_rate"], \
+        (aff_on_row["prefix_hit_rate"], aff_off_row["prefix_hit_rate"],
+         "prefix-affinity routing must not LOWER the fleet hit rate "
+         "on the shared-tenant trace")
+    assert aff_on_row["affinity_routed"] > 0, \
+        "affinity-on run never routed by prefix ownership"
+
+    # -- budget contrast: single chunked engine, SLO retuning only -----
+    budget_ms = 5.0
+    prior = step_time_prior(cfg, 1, LPU_FPGA, kv_len=args.max_seq)
+    eng_kw = dict(slots=args.slots, max_seq=args.max_seq, paged=True,
+                  block_size=args.block_size, num_blocks=pool,
+                  prefill_chunk=args.prefill_chunk)
+    bud_off_row, bud_off_outs = run(
+        "tail-budget-off", LPUEngine(model, params,
+                                     EngineConfig(**eng_kw)))
+    bud = BudgetScheduler(budget_ms, prior_step_s=prior,
+                          max_chunk=args.max_seq)
+    bud_on_row, bud_on_outs = run(
+        "tail-budget-on",
+        LPUEngine(model, params, EngineConfig(**eng_kw)), budget=bud)
+    assert bud_on_outs == bud_off_outs, \
+        "budget scheduling changed greedy token streams"
+    assert bud.planned and bud.observed_windows > 0, \
+        (len(bud.planned), bud.observed_windows,
+         "budget-on run never planned or never observed a window")
+
+    jsonl.finish()
+    recs = read_jsonl(tracker_path)         # re-validates every record
+    assert len(recs) == jsonl.written, \
+        (len(recs), jsonl.written, "tracker artifact lost records")
+    rows = [aff_off_row, aff_on_row, bud_off_row, bud_on_row]
+    assert sum(r["request_records"] for r in rows) == 4 * len(trace), \
+        "tracker is missing per-request records"
+    return {
+        "trace": {"seed": tcfg.seed, "requests": tcfg.requests,
+                  "tenants": tcfg.tenants, "arrival": tcfg.arrival,
+                  "rate_rps": tcfg.rate_rps,
+                  "prefix_len": tcfg.prefix_len},
+        "rows": rows,
+        "same_output_affinity": aff_on_outs == aff_off_outs,
+        "same_output_budget": bud_on_outs == bud_off_outs,
+        "budget_ms": budget_ms,
+        "budget_prior_step_ms": round(prior * 1e3, 4),
+        "budget_planned": len(bud.planned),
+        "budget_observed_windows": bud.observed_windows,
+        "tracker_path": str(tracker_path),
+        "tracker_records": len(recs),
+        "ledger_balanced": True,            # asserted per run above
+    }
+
+
+TAIL_ROW_KEYS = {"mode", "completed", "failed", "cancelled", "rejected",
+                 "ttft_ms_p50", "ttft_ms_p99", "ms_per_token_p50",
+                 "ms_per_token_p99", "prefix_hits", "prefix_lookups",
+                 "prefix_hit_rate", "affinity_routed", "window_records",
+                 "request_records"}
+
+TAIL_MODES = ("tail-affinity-off", "tail-affinity-on",
+              "tail-budget-off", "tail-budget-on")
+
+
+def validate_tail(sec: dict) -> None:
+    """Schema + NaN/inf gate for the tail-latency section (CI uploads
+    it inside BENCH_serving.json / BENCH_tail_latency.json)."""
+    for key in ("trace", "rows", "same_output_affinity",
+                "same_output_budget", "budget_ms", "tracker_path",
+                "tracker_records", "ledger_balanced"):
+        if key not in sec:
+            raise ValueError(f"TAIL schema: missing key {key!r}")
+    modes = [r.get("mode") for r in sec["rows"]]
+    for want in TAIL_MODES:
+        if want not in modes:
+            raise ValueError(f"TAIL schema: missing row {want!r}")
+    for row in sec["rows"]:
+        missing = TAIL_ROW_KEYS - set(row)
+        if missing:
+            raise ValueError(
+                f"TAIL schema: row {row.get('mode')!r} missing {missing}")
+        # the smoke gate: every percentile is a real measurement
+        for k in ("ttft_ms_p50", "ttft_ms_p99", "ms_per_token_p50",
+                  "ms_per_token_p99"):
+            v = row[k]
+            if not (isinstance(v, (int, float)) and math.isfinite(v)):
+                raise ValueError(
+                    f"TAIL schema: {row['mode']}.{k}={v!r} not finite")
+        if row["ttft_ms_p99"] < 0:
+            raise ValueError(
+                f"TAIL schema: {row['mode']} has no TTFT samples")
+    if sec["tracker_records"] < 1:
+        raise ValueError("TAIL schema: empty tracker artifact")
+    _walk_finite(sec, "$tail")
+
+
+def _walk_finite(x, path):
+    if isinstance(x, dict):
+        for k, v in x.items():
+            _walk_finite(v, f"{path}.{k}")
+    elif isinstance(x, (list, tuple)):
+        for i, v in enumerate(x):
+            _walk_finite(v, f"{path}[{i}]")
+    elif isinstance(x, float) and not math.isfinite(x):
+        raise ValueError(f"BENCH schema: non-finite value at {path}")
+
+
+def print_tail(sec: dict) -> None:
+    tcfg = sec["trace"]
+    print(f"[serving_bench] tail latency: {tcfg['requests']} requests, "
+          f"{tcfg['tenants']} tenants, {tcfg['arrival']} arrivals "
+          f"@{tcfg['rate_rps']:.0f} rps (seed {tcfg['seed']})")
+    for r in sec["rows"]:
+        print(f"  {r['mode']:>18}: ttft p50/p99 "
+              f"{r['ttft_ms_p50']:8.1f}/{r['ttft_ms_p99']:8.1f} ms  "
+              f"ms/tok p50/p99 {r['ms_per_token_p50']:6.2f}/"
+              f"{r['ms_per_token_p99']:6.2f}  "
+              f"hit_rate {r['prefix_hit_rate']:.2f} "
+              f"(affinity_routed {r['affinity_routed']})  "
+              f"{r['completed']}/{r['completed'] + r['failed'] + r['cancelled']} ok")
+    print(f"  streams identical: affinity={sec['same_output_affinity']} "
+          f"budget={sec['same_output_budget']}  "
+          f"budget plans {sec['budget_planned']} "
+          f"(observed {sec['budget_observed_windows']} windows, "
+          f"prior {sec['budget_prior_step_ms']:.3f} ms/step)  "
+          f"tracker {sec['tracker_records']} records -> "
+          f"{sec['tracker_path']}")
+
+
 REQUIRED_ROW_KEYS = {"mode", "tokens_per_s", "ms_per_token", "occupancy",
                      "decode_steps", "prefills", "prefill_traces",
                      "preemptions", "kv_bytes", "kv_dense_equiv_bytes",
@@ -343,9 +595,10 @@ def validate_bench(out: dict) -> None:
     """Schema + NaN/inf gate for the CI perf-trajectory artifact."""
     for key in ("requests", "distinct_prompt_lengths",
                 "bucket_trace_bound_log2", "rows", "same_output",
-                "chaos"):
+                "chaos", "tail_latency"):
         if key not in out:
             raise ValueError(f"BENCH schema: missing top-level key {key!r}")
+    validate_tail(out["tail_latency"])
     if out["chaos"].get("mode") != "paged-stream-chaos":
         raise ValueError("BENCH schema: chaos section must carry mode "
                          "'paged-stream-chaos'")
@@ -375,16 +628,7 @@ def validate_bench(out: dict) -> None:
             raise ValueError(
                 f"BENCH schema: row {row.get('mode')!r} missing {missing}")
 
-    def walk(x, path):
-        if isinstance(x, dict):
-            for k, v in x.items():
-                walk(v, f"{path}.{k}")
-        elif isinstance(x, (list, tuple)):
-            for i, v in enumerate(x):
-                walk(v, f"{path}[{i}]")
-        elif isinstance(x, float) and not math.isfinite(x):
-            raise ValueError(f"BENCH schema: non-finite value at {path}")
-    walk(out, "$")
+    _walk_finite(out, "$")
 
 
 def main():
@@ -420,6 +664,15 @@ def main():
                          "write it to --out")
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="result file written in --smoke mode")
+    ap.add_argument("--tail-only", action="store_true",
+                    help="run ONLY the tail-latency section (bursty "
+                         "trace through the async frontend: affinity "
+                         "and budget off/on rows) — the CI "
+                         "tail-latency-smoke leg")
+    ap.add_argument("--tracker-out", default="TRACKER_serving.jsonl",
+                    help="jsonl telemetry artifact written by the "
+                         "tail-latency section (schema-validated, "
+                         "uploaded by CI)")
     args = ap.parse_args()
     if args.prefill_chunk < 1:
         ap.error("--prefill-chunk must be >= 1: the interleaved row "
@@ -441,6 +694,23 @@ def main():
                       param_dtype="float32")
     model = build_model(cfg, plan)
     params, _ = model.init(jax.random.PRNGKey(0))
+
+    if args.tail_only:
+        tail = tail_latency_section(cfg, model, params, args,
+                                    args.tracker_out)
+        out = {"requests": args.requests, "tail_latency": tail}
+        validate_tail(tail)
+        if args.json:
+            print(json.dumps(out, indent=2))
+        else:
+            print_tail(tail)
+        if args.smoke:
+            Path(args.out).write_text(json.dumps(out, indent=2),
+                                      encoding="utf-8")
+            print(f"[serving_bench] tail smoke OK -> {args.out} "
+                  f"(+ {tail['tracker_records']} tracker records -> "
+                  f"{tail['tracker_path']})")
+        return out
 
     # mixed-length trace: many distinct prompt lengths (the dense
     # engine's worst case for prefill retracing)
@@ -680,6 +950,11 @@ def main():
         dict(slots=args.slots, max_seq=args.max_seq, paged=True,
              block_size=args.block_size,
              num_blocks=args.slots * table_len + 1))
+    # tail-latency section: the async front end under the bursty trace
+    # (affinity + budget contrasts, percentile latencies, jsonl
+    # telemetry artifact) — self-gating, see tail_latency_section
+    tail = tail_latency_section(cfg, model, params, args,
+                                args.tracker_out)
 
     out = {
         "requests": args.requests,
@@ -689,6 +964,7 @@ def main():
         "scaling_rows": scaling_rows,
         "per_ring": ring_stats,
         "chaos": chaos,
+        "tail_latency": tail,
         "same_output": all(r["same_output_as_dense"] for r in rows),
     }
     if args.json:
@@ -753,6 +1029,7 @@ def main():
                   f"{r['tokens']} tokens  {r['tokens_per_s']:8.1f} tok/s  "
                   f"occ {r['occupancy']:.2f}  "
                   f"kv/rank {r['kv_bytes_per_rank']/1024:.0f} KiB")
+        print_tail(tail)
     # with prefix caching on the main rows, cache-hit tails run through
     # the chunk program's pow2 buckets — a second O(log2) trace family
     trace_bound = bucket_bound * (2 if prefix_on else 1)

@@ -45,6 +45,17 @@ scales beside the pool and dequantize inside the paged kernel's tile
 loop, halving the KV stream's HBM bytes) and ``--w-dtype {auto,int8}``
 (streamed weight precision of the gemv chain).  See docs/serving.md
 "KV & weight precision".
+
+Front-end knobs (any of these routes the batch through the async
+streaming frontend instead of the blocking generate loop):
+``--affinity {least_loaded,prefix}`` (fleet routing: least-loaded vs
+route-to-the-ring-whose-prefix-cache-owns-the-prompt),
+``--budget-ms B`` (SLO scheduling: retune prefill_chunk /
+steps_per_sync each step from a measured EWMA seeded by the analytic
+step-time prior), ``--max-pending N`` (admission bound with structured
+backpressure), ``--tracker PATH`` (jsonl telemetry: per-window
+EngineStats deltas + per-request TTFT / ms-per-token records).  See
+docs/serving.md "Async front end, SLO scheduling & telemetry".
 """
 from __future__ import annotations
 
@@ -66,6 +77,69 @@ from repro.models.registry import build_model  # noqa: E402
 from repro.serving.config import EngineConfig  # noqa: E402
 from repro.serving.engine import LPUEngine, MultiRingEngine  # noqa: E402
 from repro.serving.sampler import SamplingParams  # noqa: E402
+
+
+def serve_async(engine, cfg, args, prompts, sp):
+    """Drive the batch through the async streaming frontend instead of
+    the blocking ``generate()`` loop — the path ``--budget-ms`` /
+    ``--max-pending`` / ``--tracker`` select.  Backpressure rejections
+    are retried after the fleet quiesces (a CLI batch has nowhere to
+    shed load to), and the per-request TTFT / ms-per-token summary the
+    frontend's timelines collect is printed at the end."""
+    import asyncio
+
+    from repro.serving.budget import BudgetScheduler
+    from repro.serving.frontend import AdmissionRejected, AsyncFrontend
+    from repro.serving.tracker import JsonlTracker
+
+    budget = None
+    if args.budget_ms > 0:
+        prior = step_time_prior(cfg, max(args.tp, 1), LPU_FPGA,
+                                kv_len=args.max_seq,
+                                steps_per_sync=args.steps_per_sync)
+        budget = BudgetScheduler(args.budget_ms, prior_step_s=prior,
+                                 max_chunk=args.max_seq)
+    tracker = JsonlTracker(args.tracker) if args.tracker else None
+    retries = 0
+
+    async def go():
+        nonlocal retries
+        async with AsyncFrontend(engine, budget=budget,
+                                 tracker=tracker) as fe:
+            streams = []
+            for p in prompts:
+                while True:
+                    try:
+                        streams.append(fe.submit(p, args.max_new, sp))
+                        break
+                    except AdmissionRejected:
+                        retries += 1
+                        await fe.join()     # backpressure: drain first
+            outs = [await s.drain() for s in streams]
+        return fe, streams, outs
+
+    fe, streams, outs = asyncio.run(go())
+    tl = [s.timeline for s in streams if s.timeline.t_first is not None]
+    ttft = sorted(t.ttft_ms for t in tl)
+    mpt = sorted(t.ms_per_token for t in tl if t.tokens >= 2)
+    c = fe.counters
+    print(f"[serve] frontend: {c['completed']} completed "
+          f"{c['failed']} failed {c['cancelled']} cancelled "
+          f"({c['rejected']} backpressure rejections, {retries} retried)")
+    if ttft:
+        print(f"[serve] ttft p50/max {ttft[len(ttft) // 2]:.1f}/"
+              f"{ttft[-1]:.1f} ms"
+              + (f", ms/token p50/max {mpt[len(mpt) // 2]:.2f}/"
+                 f"{mpt[-1]:.2f}" if mpt else ""))
+    if budget is not None:
+        print(f"[serve] budget={args.budget_ms}ms: {len(budget.planned)} "
+              f"plans, mu_step {budget.mu_step * 1e3:.3f} ms "
+              f"({budget.observed_windows} windows, "
+              f"{budget.observed_chunks} chunks observed)")
+    if tracker is not None:
+        print(f"[serve] tracker: {tracker.written} records -> "
+              f"{tracker.path}")
+    return outs
 
 
 def main():
@@ -156,6 +230,27 @@ def main():
     ap.add_argument("--heartbeat-timeout", type=float, default=30.0,
                     help="ring liveness timeout in (virtual, under "
                          "chaos) seconds before drain/rebuild")
+    ap.add_argument("--affinity", default="least_loaded",
+                    choices=("least_loaded", "prefix"),
+                    help="fleet request routing: least-loaded, or "
+                         "prefix-affinity (route to the ring whose "
+                         "prefix cache owns the prompt's deepest "
+                         "block-aligned prefix; needs --prefix-cache on)")
+    ap.add_argument("--budget-ms", type=float, default=0.0,
+                    help="per-step latency budget (SLO): the async "
+                         "frontend retunes prefill_chunk / "
+                         "steps_per_sync each step from a measured "
+                         "EWMA seeded by the analytic step-time prior "
+                         "(0 = off; forces the async frontend path)")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="frontend admission bound: in-flight streams "
+                         "above this are rejected with a structured "
+                         "AdmissionRejected (0 = unbounded; forces the "
+                         "async frontend path)")
+    ap.add_argument("--tracker", default="",
+                    help="write per-window EngineStats deltas and "
+                         "per-request TTFT/ms-per-token records to this "
+                         "jsonl file (forces the async frontend path)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -201,7 +296,10 @@ def main():
                          kv_dtype=args.kv_dtype, w_dtype=args.w_dtype,
                          chaos=args.chaos,
                          max_migrations=args.max_migrations,
-                         heartbeat_timeout_s=args.heartbeat_timeout)
+                         heartbeat_timeout_s=args.heartbeat_timeout,
+                         affinity=args.affinity,
+                         budget_ms=args.budget_ms,
+                         max_pending=args.max_pending)
     fleet = rings > 1 or bool(args.chaos)
     if fleet:
         # seed each ring's straggler monitor with the analytic latency
@@ -237,8 +335,11 @@ def main():
     def cb(rid, tok):
         pass  # streaming hook (stdout spam suppressed)
 
-    outs = engine.generate(prompts, max_new_tokens=args.max_new,
-                           params=sp, stream_cb=cb)
+    if args.budget_ms > 0 or args.max_pending > 0 or args.tracker:
+        outs = serve_async(engine, cfg, args, prompts, sp)
+    else:
+        outs = engine.generate(prompts, max_new_tokens=args.max_new,
+                               params=sp, stream_cb=cb)
     mode = f"paged/{first.paged_kernel}" if first.paged else "dense"
     if fleet:
         print(f"[serve] {len(outs)} requests over {engine.n_rings} "

@@ -1,0 +1,124 @@
+"""Latency-budget (SLO) step scheduling for the async frontend.
+
+The engine has two per-step latency knobs:
+
+* ``steps_per_sync`` (S) — decode tokens fused into one device window
+  before the host syncs.  Bigger S amortizes dispatch/sync overhead
+  (throughput) but delays stream reconciliation by S tokens (tail
+  latency): a window IS the granularity at which tokens reach users.
+* ``prefill_chunk`` (C) — prompt tokens made resident per step in
+  chunked-prefill mode.  Bigger C admits faster (TTFT of the admitting
+  request) but each chunk launch occupies the step for longer,
+  stretching every in-flight stream's inter-token gap.
+
+:class:`BudgetScheduler` picks both each step so one engine step fits a
+caller-given latency budget: an EWMA of *measured* per-decode-step and
+per-chunk-token times, seeded from the analytic prior
+(:func:`repro.core.latency_model.step_time_prior`) so the very first
+step is already tuned instead of warming up blind — this folds in the
+ROADMAP's open chunk-autotuning item (pick C from measured step time
+rather than a hand-set constant).
+
+Chunk widths are quantized to powers of two: the chunk program jit
+retraces per distinct width, so free-running C would trade its latency
+win back as compile stalls.  Window sizes need no such care — the
+engine caches one traced program per S.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+class BudgetScheduler:
+    """EWMA-tracked per-step latency model + knob planner.
+
+    Parameters
+    ----------
+    budget_ms:
+        Target wall time of ONE engine step.  The planner chooses the
+        largest S (and C) whose predicted cost stays under it.
+    prior_step_s:
+        Analytic seed for the per-decode-step EWMA (seconds), normally
+        ``step_time_prior(cfg, n_devices, hw)``.  ``0`` falls back to
+        ``budget_ms`` itself (first window = 1 step, then measure).
+    prior_chunk_tok_s:
+        Seed for the per-prefill-token EWMA.  ``0`` derives a pessimistic
+        seed from ``prior_step_s`` (one prompt token ~ one decode step's
+        compute upper-bounds the chunked path, which amortizes weight
+        streaming across the chunk); the first measured chunk corrects it.
+    """
+
+    def __init__(self, budget_ms: float, *, prior_step_s: float = 0.0,
+                 prior_chunk_tok_s: float = 0.0, alpha: float = 0.25,
+                 max_steps_per_sync: int = 16, min_chunk: int = 8,
+                 max_chunk: int = 256):
+        if budget_ms <= 0:
+            raise ValueError(f"budget_ms={budget_ms} must be > 0")
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"alpha={alpha} must be in (0, 1]")
+        if max_steps_per_sync < 1:
+            raise ValueError(
+                f"max_steps_per_sync={max_steps_per_sync} must be >= 1")
+        if not (0 < min_chunk <= max_chunk):
+            raise ValueError(f"need 0 < min_chunk <= max_chunk, got "
+                             f"({min_chunk}, {max_chunk})")
+        self.budget_s = budget_ms * 1e-3
+        self.alpha = alpha
+        self.max_steps_per_sync = int(max_steps_per_sync)
+        self.min_chunk = int(min_chunk)
+        self.max_chunk = int(max_chunk)
+        self.mu_step = float(prior_step_s) or self.budget_s
+        self.mu_tok = float(prior_chunk_tok_s) or self.mu_step
+        self.observed_windows = 0
+        self.observed_chunks = 0
+        self.planned: list = []         # (chunk, steps) telemetry trail
+
+    # -- measurement ---------------------------------------------------
+
+    def observe_window(self, dt_s: float, steps: int) -> None:
+        """Fold one measured decode window (``steps`` fused device
+        steps in ``dt_s`` seconds) into the per-step EWMA."""
+        if steps < 1 or dt_s < 0:
+            return
+        x = dt_s / steps
+        self.mu_step += self.alpha * (x - self.mu_step)
+        self.observed_windows += 1
+
+    def observe_chunk(self, dt_s: float, tokens: int) -> None:
+        """Fold one measured prefill chunk into the per-token EWMA."""
+        if tokens < 1 or dt_s < 0:
+            return
+        x = dt_s / tokens
+        self.mu_tok += self.alpha * (x - self.mu_tok)
+        self.observed_chunks += 1
+
+    # -- planning ------------------------------------------------------
+
+    def plan_steps(self) -> int:
+        """Largest fused window predicted to fit the budget."""
+        s = int(self.budget_s / max(self.mu_step, 1e-9))
+        return max(1, min(s, self.max_steps_per_sync))
+
+    def plan_chunk(self) -> int:
+        """Largest pow2 chunk width predicted to fit the budget."""
+        c = int(self.budget_s / max(self.mu_tok, 1e-9))
+        c = max(self.min_chunk, min(c, self.max_chunk))
+        return _pow2_floor(c)
+
+    def plan(self, *, chunked: bool = True,
+             fused: bool = True) -> Tuple[Optional[int], int]:
+        """One (prefill_chunk, steps_per_sync) decision for the next
+        engine step.  ``chunked=False`` (engine runs monolithic prefill)
+        returns ``None`` for the chunk so the caller leaves that knob
+        alone; ``fused=False`` (host sampling) pins S to 1."""
+        chunk = self.plan_chunk() if chunked else None
+        steps = self.plan_steps() if fused else 1
+        self.planned.append((chunk, steps))
+        return chunk, steps

@@ -18,6 +18,9 @@ groups mirror the engine's subsystems:
                    ``heartbeat_timeout_s``, ``ft_straggler_drain``
                    (the serving FT subsystem — see
                    :mod:`repro.serving.ft` and docs/serving.md)
+* front end:       ``affinity``, ``budget_ms``, ``max_pending``
+                   (async serving layer — :mod:`repro.serving.frontend`,
+                   :mod:`repro.serving.budget`)
 
 Legacy construction (``LPUEngine(model, params, slots=8, ...)``) still
 works through :func:`resolve_engine_config`, which folds the kwargs
@@ -83,8 +86,30 @@ class EngineConfig:
                                        # runs via ManualClock)
     ft_straggler_drain: bool = False   # drain/rebuild a straggler-flagged
                                        # ring (default: log the event only)
+    # serving front end (repro.serving.frontend / budget / tracker)
+    affinity: str = "least_loaded"     # least_loaded | prefix — fleet
+                                       # routing policy: "prefix" sends a
+                                       # request to the ring whose
+                                       # PrefixCache owns the deepest
+                                       # prefix of its prompt
+    budget_ms: float = 0.0             # per-step latency budget for the
+                                       # SLO scheduler (0 = off): the
+                                       # frontend retunes prefill_chunk /
+                                       # steps_per_sync each step from an
+                                       # EWMA seeded by step_time_prior
+    max_pending: int = 0               # frontend admission bound (0 =
+                                       # unbounded): in-flight streams
+                                       # above this are rejected with a
+                                       # structured AdmissionRejected
 
     def __post_init__(self):
+        if self.affinity not in ("least_loaded", "prefix"):
+            raise ValueError(f"affinity={self.affinity!r} not in "
+                             "('least_loaded', 'prefix')")
+        if self.budget_ms < 0:
+            raise ValueError(f"budget_ms={self.budget_ms} must be >= 0")
+        if self.max_pending < 0:
+            raise ValueError(f"max_pending={self.max_pending} must be >= 0")
         if self.kv_dtype not in KV_DTYPES:
             raise ValueError(f"kv_dtype={self.kv_dtype!r} not in "
                              f"{KV_DTYPES}")

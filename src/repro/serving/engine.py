@@ -130,6 +130,9 @@ class Request:
                                   # request is done but its stream is
                                   # incomplete; ``error`` says why
     error: Optional[str] = None
+    cancelled: bool = False       # caller-initiated abort (frontend
+                                  # cancellation): done, not failed —
+                                  # the partial stream is intentional
 
     def resume_tokens(self) -> List[int]:
         """Tokens whose KV must be resident before decoding continues.
@@ -190,6 +193,8 @@ class EngineStats:
     rejected_requests: int = 0    # admissions rejected with a structured
                                   # per-request failure instead of a
                                   # scheduler RuntimeError (livelock fix)
+    cancelled_requests: int = 0   # caller-aborted via cancel(): slot and
+                                  # blocks released mid-stream
 
     @property
     def tokens_per_s(self) -> float:
@@ -463,6 +468,16 @@ class LPUEngine:
         self.sched = Scheduler(slots, max_seq, pool, min_bucket,
                                prefix=self.prefix)
         self.stats = EngineStats()
+        # cumulative bases for the stats fields ASSIGNED (not
+        # incremented) from subsystem counters — scheduler preemptions,
+        # pool evictions, prefix index counters.  reset() rebuilds those
+        # subsystems from zero; folding the pre-reset totals in here
+        # keeps EngineStats monotone across drain/rebuild cycles, so
+        # per-window telemetry deltas (serving/tracker.py) never go
+        # negative after a migration.
+        self._ctr_base = dict(preemptions=0, evicted_blocks=0,
+                              prefix_lookups=0, prefix_hits=0,
+                              prefix_hit_blocks=0, prefill_tokens_saved=0)
         self._results: Dict[int, List[int]] = {}
         self._rid = 0
         self._chunk_rr = -1           # admit_seq of the last chunk served
@@ -519,6 +534,17 @@ class LPUEngine:
                    sorted((s for s in self.sched.active if s is not None),
                           key=lambda s: s.admit_seq)]
         orphans += list(self.sched.queue)
+        # the rebuilt scheduler/pool/prefix restart their counters at
+        # zero: bank the cumulative totals so the ASSIGNED stats fields
+        # stay monotone (telemetry deltas must never regress — the
+        # tracker seam diffs consecutive snapshots)
+        self._ctr_base["preemptions"] = self.stats.preemptions
+        self._ctr_base["evicted_blocks"] = self.stats.evicted_blocks
+        self._ctr_base["prefix_lookups"] = self.stats.prefix_lookups
+        self._ctr_base["prefix_hits"] = self.stats.prefix_hits
+        self._ctr_base["prefix_hit_blocks"] = self.stats.prefix_hit_blocks
+        self._ctr_base["prefill_tokens_saved"] = \
+            self.stats.prefill_tokens_saved
         pool = self._init_kv_state()
         if self.mesh is not None:
             self.cache = jax.device_put(self.cache, self._cache_named)
@@ -1243,6 +1269,80 @@ class LPUEngine:
         self.sched.submit(req)
         return req.rid
 
+    def has_work(self) -> bool:
+        """True while the queue or any slot holds an unfinished request
+        (same signal :meth:`drain` loops on; the async frontend's pump
+        uses it to idle without busy-stepping an empty engine)."""
+        return self.sched.has_work()
+
+    def cancel(self, rid: int) -> Optional[Request]:
+        """Abort one request between steps: pop it from the queue, or
+        release its slot and free its pool blocks if already admitted
+        (shared prefix blocks just drop a refcount — cached KV survives
+        for future hits).  The partial stream is kept in the results
+        buffer.  Returns the request, or None if ``rid`` is not in
+        flight here (already finished, or routed to another ring).
+
+        Host-side only and safe by construction: ``step()`` reconciles
+        every dispatched window before returning, so no in-flight device
+        program can still scatter into the freed blocks.
+        """
+        req = None
+        for r in self.sched.queue:
+            if r.rid == rid:
+                self.sched.queue.remove(r)
+                req = r
+                break
+        else:
+            for seq in self.sched.active:
+                if seq is not None and seq.req.rid == rid:
+                    self.sched.release(seq)
+                    req = seq.req
+                    break
+        if req is None:
+            return None
+        req.done = True
+        req.cancelled = True
+        self._results[rid] = req.out
+        self.stats.cancelled_requests += 1
+        self.events.append(Event("request_cancelled", self._step_no,
+                                 {"rid": rid, "tokens": len(req.out)}))
+        return req
+
+    def set_step_knobs(self, prefill_chunk: Optional[int] = None,
+                       steps_per_sync: Optional[int] = None) -> None:
+        """Retune the per-step latency knobs between steps — the seam
+        the SLO budget scheduler (serving/budget.py) drives.
+
+        Cheap by design: decode windows are jitted per window size
+        (``_window_jits[S]``) so a new ``steps_per_sync`` at worst adds
+        one trace, and the chunk program retraces once per distinct
+        chunk width (the budget scheduler quantizes to powers of two to
+        bound that).  Validation mirrors construction; additionally a
+        chunked engine can never drop back to ``prefill_chunk=0`` —
+        mid-prefill sequences would starve (only ``_admit_and_chunk``
+        feeds them), and monolithic prefill cannot resume a
+        half-resident prompt.
+        """
+        if steps_per_sync is not None:
+            s = int(steps_per_sync)
+            if s < 1:
+                raise ValueError(f"steps_per_sync={s} must be >= 1")
+            if s > 1 and self.sampling != "fused":
+                raise ValueError("steps_per_sync > 1 needs fused sampling")
+            self.steps_per_sync = s
+        if prefill_chunk is not None:
+            c = int(prefill_chunk)
+            if c < 0:
+                raise ValueError(f"prefill_chunk={c} must be >= 0")
+            if c and not self.paged:
+                raise ValueError("prefill_chunk needs the paged KV pool")
+            if c == 0 and self.prefill_chunk:
+                raise ValueError(
+                    "cannot leave chunked-prefill mode mid-serve: "
+                    "admitted prompts may be partially resident")
+            self.prefill_chunk = c
+
     def step(self) -> List[Request]:
         """One scheduler round: admit + prefill (monolithic, or ONE
         chunk in ``prefill_chunk`` mode), then one decode round for the
@@ -1280,16 +1380,22 @@ class LPUEngine:
                     finished.append(done)
         finished += self._harvest_rejections()
         self.sched.ensure_decode_capacity()     # may preempt (recompute)
-        self.stats.preemptions = self.sched.preemptions
+        base = self._ctr_base
+        self.stats.preemptions = base["preemptions"] \
+            + self.sched.preemptions
         if self.sched.pool is not None:
             self.stats.peak_pool_blocks = max(self.stats.peak_pool_blocks,
                                               self.sched.pool.num_used)
-            self.stats.evicted_blocks = self.sched.pool.evicted_blocks
+            self.stats.evicted_blocks = base["evicted_blocks"] \
+                + self.sched.pool.evicted_blocks
         if self.prefix is not None:
-            self.stats.prefix_lookups = self.prefix.lookups
-            self.stats.prefix_hits = self.prefix.hits
-            self.stats.prefix_hit_blocks = self.prefix.hit_blocks
-            self.stats.prefill_tokens_saved = self.prefix.tokens_saved
+            self.stats.prefix_lookups = base["prefix_lookups"] \
+                + self.prefix.lookups
+            self.stats.prefix_hits = base["prefix_hits"] + self.prefix.hits
+            self.stats.prefix_hit_blocks = base["prefix_hit_blocks"] \
+                + self.prefix.hit_blocks
+            self.stats.prefill_tokens_saved = base["prefill_tokens_saved"] \
+                + self.prefix.tokens_saved
         if self.sched.num_decoding() == 0:
             return finished
         if self.drafter is not None:
@@ -1836,6 +1942,9 @@ class MultiRingEngine:
         # -- supervision state (see class docstring) -------------------
         c = self.engines[0].config
         self.max_migrations = c.max_migrations
+        # "prefix": probe every ring's PrefixCache at submit and prefer
+        # the deepest owner of the prompt's block chain (see RingRouter)
+        self.affinity = c.affinity
         chaotic = any(e.injector is not None for e in self.engines)
         # chaos runs default to a virtual clock (1 fleet round = 1 s)
         # so heartbeat timeouts are step-deterministic, never wall time
@@ -1859,15 +1968,31 @@ class MultiRingEngine:
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
                params: Optional[SamplingParams] = None,
                stream_cb: Optional[StreamCB] = None) -> int:
-        """Route to the least-loaded sub-ring; returns a global rid."""
-        ring = self.router.route([e.pending_load() for e in self.engines])
-        req = Request(self._rid, list(prompt), max_new_tokens,
+        """Route to the prefix-owning ring (``affinity="prefix"``) or
+        the least-loaded sub-ring; returns a global rid."""
+        prompt = list(prompt)
+        aff = None
+        if self.affinity == "prefix":
+            aff = [e.prefix.peek(prompt) if e.prefix is not None else 0
+                   for e in self.engines]
+        ring = self.router.route(
+            [e.pending_load() for e in self.engines], affinity=aff)
+        req = Request(self._rid, prompt, max_new_tokens,
                       params or SamplingParams(0.0, 0, 1.0),
                       stream_cb=stream_cb)
         self._rid += 1
         self.engines[ring].submit(req)
         self.ring_of[req.rid] = ring
         return req.rid
+
+    def cancel(self, rid: int) -> Optional[Request]:
+        """Abort one in-flight request on whichever ring owns it (the
+        ``ring_of`` map follows migrations).  Returns the request, or
+        None if it already finished / terminally failed."""
+        ring = self.ring_of.get(rid)
+        if ring is None:
+            return None
+        return self.engines[ring].cancel(rid)
 
     def step(self) -> List[Request]:
         """One supervised round on every sub-ring that has work.

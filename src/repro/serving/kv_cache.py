@@ -309,6 +309,28 @@ class PrefixCache:
         self.pool.touch(shared)
         return shared, cached
 
+    def peek(self, tokens: Sequence[int]) -> int:
+        """Stats-neutral probe: prefix tokens of ``tokens`` this index
+        could map right now, with :meth:`match`'s same ``n - 1`` cap.
+
+        Used by the fleet's prefix-affinity router to ask every ring
+        "how much of this prompt do you already own?" BEFORE choosing
+        one — so it must not count as a lookup (hit-rate telemetry
+        stays an admission-path property) and must not ``touch`` the
+        LRU (probing all rings would otherwise rejuvenate blocks on
+        rings the request never lands on).
+        """
+        bs = self.block_size
+        n = len(tokens)
+        hit = 0
+        h = 0
+        for i in range(n // bs):
+            h = _chain_hash(h, tokens[i * bs:(i + 1) * bs])
+            if self._by_hash.get(h) is None:
+                break
+            hit += 1
+        return max(min(hit * bs, n - 1), 0)
+
     def note_hit(self, shared: Sequence[int], cached: int) -> None:
         """Count a hit that actually admitted (the scheduler calls this
         after the tail allocation succeeds, so a request that waits and

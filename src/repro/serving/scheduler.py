@@ -433,17 +433,42 @@ class RingRouter:
     so an idle fleet fills round-robin).  Deliberately NOT work-stealing:
     once placed, a request's KV lives in one ring's pool, and moving it
     would mean a cross-ring recompute — the paper's rings share nothing.
+
+    Prefix-affinity (``EngineConfig.affinity="prefix"``): because KV is
+    ring-local, a prompt whose prefix is resident in ring i's
+    ``PrefixCache`` prefills its shared span for free ONLY on ring i.
+    The fleet probes every ring's index (``PrefixCache.peek``, stats-
+    and LRU-neutral) and passes per-ring cached-token counts here;
+    ``route`` then sends the request to the deepest owner, falling back
+    to least-loaded when no ring owns any of the prompt.  Affinity wins
+    TTFT (tokens never re-prefilled) at the cost of load skew, which is
+    why it is opt-in and why the bench reports both rows.
     """
 
     def __init__(self, n_rings: int):
         assert n_rings >= 1
         self.n_rings = n_rings
         self.routed = [0] * n_rings
+        self.affinity_routed = [0] * n_rings
 
-    def route(self, loads: Sequence[int]) -> int:
+    def route(self, loads: Sequence[int],
+              affinity: Optional[Sequence[int]] = None) -> int:
         """Pick the target ring for one request given per-ring loads
-        (:meth:`Scheduler.pending_tokens` of each ring's engine)."""
+        (:meth:`Scheduler.pending_tokens` of each ring's engine) and,
+        optionally, per-ring prefix-affinity scores (cached prompt
+        tokens from ``PrefixCache.peek``; deepest owner wins, ties ->
+        lowest ring id, all-zero -> least-loaded fallback)."""
         assert len(loads) == self.n_rings, (len(loads), self.n_rings)
+        if affinity is not None:
+            assert len(affinity) == self.n_rings, \
+                (len(affinity), self.n_rings)
+            best = max(affinity)
+            if best > 0:
+                ring = min(i for i in range(self.n_rings)
+                           if affinity[i] == best)
+                self.routed[ring] += 1
+                self.affinity_routed[ring] += 1
+                return ring
         ring = min(range(self.n_rings), key=lambda i: (loads[i], i))
         self.routed[ring] += 1
         return ring

@@ -21,3 +21,22 @@ def pytest_collection_modifyitems(config, items):
     for item in items:
         if "slow" in item.keywords:
             item.add_marker(skip)
+
+
+def pytest_pyfunc_call(pyfuncitem):
+    """Minimal asyncio test runner: a coroutine test function (the
+    ``asyncio``-marked frontend suite) is executed to completion on a
+    fresh event loop.  This keeps CI's dependency set at
+    jax/numpy/pytest/hypothesis — no pytest-asyncio — while letting the
+    async serving tests be plain ``async def`` functions."""
+    import inspect
+
+    fn = pyfuncitem.obj
+    if not inspect.iscoroutinefunction(fn):
+        return None
+    import asyncio
+
+    kwargs = {name: pyfuncitem.funcargs[name]
+              for name in pyfuncitem._fixtureinfo.argnames}
+    asyncio.run(fn(**kwargs))
+    return True

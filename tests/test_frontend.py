@@ -1,0 +1,222 @@
+"""Async serving front end: streaming parity, cancellation, backpressure.
+
+Parity is the load-bearing property: the frontend is a *facade* — it
+must not perturb the engine's step order, so greedy token streams
+consumed ``async for`` are bit-identical to the blocking
+submit/step/drain results, on a single engine AND a mesh-free 2-ring
+fleet, with and without SLO budget scheduling (window/chunk retuning is
+parity-safe by the engine's own window-size gates).
+
+Resource properties: cancellation mid-stream releases the slot and
+every pool block (``check_pool_balanced`` after drain), and admission
+beyond ``max_pending`` raises a structured ``AdmissionRejected`` whose
+fields (not its message) carry the numbers.
+"""
+import jax
+import pytest
+
+from repro.compiler.mapper import plan_model
+from repro.configs import get_config
+from repro.models.registry import build_model
+from repro.serving.budget import BudgetScheduler
+from repro.serving.config import EngineConfig
+from repro.serving.engine import LPUEngine, MultiRingEngine
+from repro.serving.frontend import (AdmissionRejected, AsyncFrontend,
+                                    serve_trace)
+from repro.serving.tracker import RingBufferTracker
+
+pytestmark = pytest.mark.asyncio
+
+PROMPTS = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [1, 2, 3, 4, 5, 6]]
+ECONF = EngineConfig(slots=2, max_seq=64, paged=True, block_size=16)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("smollm-135m").reduced()
+    plan = plan_model(cfg, None, (1,), "serve", esl_overlap=False,
+                      remat="none", compute_dtype="float32",
+                      param_dtype="float32")
+    model = build_model(cfg, plan)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def blocking_base(tiny_model):
+    model, params = tiny_model
+    return LPUEngine(model, params, ECONF).generate(PROMPTS,
+                                                    max_new_tokens=8)
+
+
+async def test_streaming_parity_tp1(tiny_model, blocking_base):
+    model, params = tiny_model
+    eng = LPUEngine(model, params, ECONF)
+    async with AsyncFrontend(eng) as fe:
+        streams = [fe.submit(p, 8) for p in PROMPTS]
+        outs = [await s.drain() for s in streams]
+    assert outs == blocking_base          # bit-identical, greedy
+    assert all(s.status == "completed" for s in streams)
+    assert fe.counters["completed"] == len(PROMPTS)
+    assert fe.counters["completed"] + fe.counters["failed"] \
+        + fe.counters["cancelled"] == fe.counters["submitted"]
+    eng.check_pool_balanced()
+
+
+async def test_streaming_parity_2ring_fleet(tiny_model):
+    model, params = tiny_model
+    base = MultiRingEngine(model, params, None, rings=2,
+                           config=ECONF).generate(PROMPTS, 8)
+    fleet = MultiRingEngine(model, params, None, rings=2, config=ECONF)
+    async with AsyncFrontend(fleet) as fe:
+        streams = [fe.submit(p, 8) for p in PROMPTS]
+        outs = [await s.drain() for s in streams]
+    assert outs == base                   # same routing, same streams
+    for eng in fleet.engines:
+        eng.check_pool_balanced()
+
+
+async def test_budget_scheduling_keeps_parity(tiny_model):
+    # SLO retuning changes WHEN tokens reconcile, never WHICH tokens:
+    # the budget-driven frontend must stream bit-identically while
+    # actually exercising the knob seam (plans recorded, EWMA updated)
+    model, params = tiny_model
+    chunked = ECONF.with_overrides(prefill_chunk=16)
+    base = LPUEngine(model, params, chunked).generate(PROMPTS, 8)
+    eng = LPUEngine(model, params, chunked)
+    bud = BudgetScheduler(5.0, prior_step_s=2e-3, max_chunk=32)
+    async with AsyncFrontend(eng, budget=bud) as fe:
+        streams = [fe.submit(p, 8) for p in PROMPTS]
+        outs = [await s.drain() for s in streams]
+    assert outs == base
+    assert bud.planned                     # the planner actually ran
+    assert bud.observed_windows > 0        # ...and measured real steps
+    assert all(c is None or c >= 8 for c, _ in bud.planned)
+    assert all(1 <= s <= bud.max_steps_per_sync for _, s in bud.planned)
+
+
+async def test_cancel_mid_stream_frees_blocks(tiny_model):
+    model, params = tiny_model
+    eng = LPUEngine(model, params, ECONF)
+    async with AsyncFrontend(eng) as fe:
+        victim = fe.submit([1, 2, 3], 40)
+        mate = fe.submit([4, 5], 6)
+        got = 0
+        async for _ in victim:
+            got += 1
+            if got == 3:
+                assert await victim.cancel()
+                break
+        await fe.join()
+    assert victim.status == "cancelled"
+    assert len(victim.tokens) < 40        # genuinely aborted early
+    assert mate.status == "completed"     # co-tenant unaffected
+    assert eng.stats.cancelled_requests == 1
+    assert fe.counters["cancelled"] == 1
+    assert fe.counters["completed"] + fe.counters["failed"] \
+        + fe.counters["cancelled"] == fe.counters["submitted"]
+    eng.check_pool_balanced()             # zero leaked pool blocks
+    # double-cancel and cancel-after-finish are no-ops
+    assert not await victim.cancel()
+    assert not await mate.cancel()
+
+
+async def test_cancel_queued_request(tiny_model):
+    # slots=2 + 3 submits: the third sits in the scheduler queue; a
+    # queued cancel must remove it before it ever owns blocks
+    model, params = tiny_model
+    eng = LPUEngine(model, params, ECONF)
+    async with AsyncFrontend(eng) as fe:
+        a = fe.submit([1, 2, 3], 6)
+        b = fe.submit([4, 5], 6)
+        c = fe.submit([6, 7, 8], 6)
+        assert await c.cancel()
+        outs = [await s.drain() for s in (a, b)]
+    assert c.status == "cancelled" and c.tokens == []
+    assert all(len(o) == 6 for o in outs)
+    eng.check_pool_balanced()
+
+
+async def test_backpressure_structured_rejection(tiny_model):
+    model, params = tiny_model
+    eng = LPUEngine(model, params, ECONF)
+    async with AsyncFrontend(eng, max_pending=2) as fe:
+        s1 = fe.submit([1, 2, 3], 6)
+        s2 = fe.submit([4, 5], 6)
+        with pytest.raises(AdmissionRejected) as exc:
+            fe.submit([6, 7], 6)
+        assert exc.value.pending == 2 and exc.value.limit == 2
+        assert fe.counters["rejected"] == 1
+        await s1.drain()
+        await s2.drain()
+        # capacity freed: admission opens again
+        s3 = fe.submit([6, 7], 6)
+        assert (await s3.drain())
+    assert fe.counters["submitted"] == 3
+
+
+async def test_max_pending_flows_from_config(tiny_model):
+    model, params = tiny_model
+    eng = LPUEngine(model, params, ECONF.with_overrides(max_pending=1))
+    async with AsyncFrontend(eng) as fe:
+        assert fe.max_pending == 1
+        fe.submit([1, 2, 3], 4)
+        with pytest.raises(AdmissionRejected):
+            fe.submit([4, 5], 4)
+        await fe.join()
+
+
+async def test_failed_request_surfaces_through_stream(tiny_model):
+    # a request whose resume state can never fit is rejected by the
+    # scheduler mid-serve; the frontend must end its stream with
+    # status="failed" + error, not hang the consumer
+    from repro.serving.engine import Request
+    model, params = tiny_model
+    eng = LPUEngine(model, params, EngineConfig(
+        slots=2, max_seq=64, paged=True, block_size=16, num_blocks=3))
+    async with AsyncFrontend(eng) as fe:
+        big = Request(7, list(range(1, 11)), 50)
+        big.out = list(range(100, 145))    # resume needs 4 blocks
+        t0 = fe.clock()
+        rid = eng.submit(big)
+        from repro.serving.frontend import TokenStream
+        from repro.serving.tracker import RequestTimeline
+        stream = TokenStream(rid, fe, RequestTimeline(rid, t0))
+        fe._streams[rid] = stream
+        fe._inflight[rid] = stream
+        fe.counters["submitted"] += 1
+        fe._idle.clear()
+        fe._wake.set()
+        ok = fe.submit([1, 2, 3], 4)
+        await stream.drain()
+        await ok.drain()
+    assert stream.status == "failed" and "blocks" in stream.error
+    assert ok.status == "completed"
+    assert fe.counters["failed"] == 1
+    assert fe.counters["completed"] + fe.counters["failed"] \
+        + fe.counters["cancelled"] == fe.counters["submitted"]
+
+
+async def test_serve_trace_replay_and_telemetry(tiny_model):
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]
+                           / "benchmarks"))
+    import traces as tr
+    model, params = tiny_model
+    trace = tr.generate_trace(tr.TraceConfig(
+        seed=3, requests=6, tenants=2, prefix_len=16, tail_max=8,
+        max_new_max=6, rate_rps=1000.0))
+    fleet = MultiRingEngine(model, params, None, rings=2,
+                            config=ECONF.with_overrides(prefix_cache=True))
+    sink = RingBufferTracker(512)
+    async with AsyncFrontend(fleet, tracker=sink) as fe:
+        streams = await serve_trace(fe, trace, speed=100.0)
+    assert all(s is not None and s.status == "completed" for s in streams)
+    kinds = {r["kind"] for r in sink.records()}
+    assert kinds == {"engine_window", "request"}
+    reqs = [r for r in sink.records() if r["kind"] == "request"]
+    assert len(reqs) == len(trace)
+    assert all(r["ttft_ms"] >= 0 for r in reqs)
+    for eng in fleet.engines:
+        eng.check_pool_balanced()

@@ -1,0 +1,233 @@
+"""Tracker protocol units + the EngineStats delta-accounting contract.
+
+The schema tests need no model; the end-to-end delta tests drive a real
+engine (and a chaos fleet) and lock the property the tracker seam
+depends on: cumulative ``EngineStats`` counters are MONOTONE — even
+across ``reset()``/ring rebuilds, where the engine banks subsystem
+counter bases (the regression this PR fixes: preemptions, evictions and
+the prefix counters used to restart from zero after a migration, so
+per-window deltas went negative).
+"""
+import json
+import math
+
+import jax
+import pytest
+
+from repro.compiler.mapper import plan_model
+from repro.configs import get_config
+from repro.models.registry import build_model
+from repro.serving.config import EngineConfig
+from repro.serving.engine import EngineStats, LPUEngine, MultiRingEngine
+from repro.serving.tracker import (CompositeTracker, EngineTap,
+                                   JsonlTracker, NullTracker,
+                                   RequestTimeline, RingBufferTracker,
+                                   counter_fields, read_jsonl,
+                                   snapshot_stats, stats_delta,
+                                   validate_record)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("smollm-135m").reduced()
+    plan = plan_model(cfg, None, (1,), "serve", esl_overlap=False,
+                      remat="none", compute_dtype="float32",
+                      param_dtype="float32")
+    model = build_model(cfg, plan)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+# -- schema / sinks (no model) -----------------------------------------
+
+
+WINDOW_REC = {"kind": "engine_window", "t": 1.0, "ring": 0, "step": 3,
+              "dt_ms": 2.5, "delta": {"steps": 1, "tokens": 2}}
+REQ_REC = {"kind": "request", "t": 2.0, "rid": 7, "status": "completed",
+           "tokens": 5, "ttft_ms": 12.0, "ms_per_token": 3.0}
+
+
+def test_validate_record_rejects_malformed():
+    validate_record(WINDOW_REC)
+    validate_record(REQ_REC)
+    validate_record({"kind": "event", "t": 0.0, "name": "x"})
+    for bad in (
+        {"kind": "nope", "t": 0.0},
+        {"kind": "engine_window", "t": float("nan"), "ring": 0,
+         "step": 0, "dt_ms": 0.0, "delta": {}},
+        {**WINDOW_REC, "delta": {"steps": -1}},      # regressed counter
+        {k: v for k, v in REQ_REC.items() if k != "ttft_ms"},
+        {**REQ_REC, "status": "exploded"},
+        "not a dict",
+    ):
+        with pytest.raises(ValueError):
+            validate_record(bad)
+
+
+def test_jsonl_sink_round_trips(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    with JsonlTracker(path) as tr:
+        tr.log(WINDOW_REC)
+        tr.log(REQ_REC)
+        with pytest.raises(ValueError):
+            tr.log({"kind": "request", "t": 0.0})   # invalid: not written
+    assert tr.written == 2
+    back = read_jsonl(path)
+    assert back == [WINDOW_REC, REQ_REC]
+    # every line is standalone JSON (the artifact contract)
+    with open(path) as fh:
+        for line in fh:
+            json.loads(line)
+
+
+def test_ring_buffer_windows_correctly():
+    tr = RingBufferTracker(capacity=3)
+    for i in range(5):
+        tr.log({"kind": "event", "t": float(i), "name": f"e{i}"})
+    assert tr.seen == 5
+    assert [r["name"] for r in tr.records()] == ["e2", "e3", "e4"]
+    assert [r["name"] for r in tr.window(2)] == ["e3", "e4"]
+    assert [r["name"] for r in tr.window(99)] == ["e2", "e3", "e4"]
+    assert tr.window(0) == []
+    with pytest.raises(ValueError):
+        RingBufferTracker(0)
+
+
+def test_composite_fans_out():
+    a, b = RingBufferTracker(8), RingBufferTracker(8)
+    CompositeTracker([a, b]).log(WINDOW_REC)
+    assert a.records() == b.records() == [WINDOW_REC]
+    NullTracker().log(WINDOW_REC)                   # silently fine
+
+
+def test_request_timeline_ttft_monotone():
+    tl = RequestTimeline(1, t_submit=10.0, tenant="a")
+    ts = [10.4, 10.5, 10.7, 11.0]
+    for t in ts:
+        tl.on_token(t)
+    assert tl.ttft_ms == pytest.approx(400.0)
+    # ms/token averages the post-first-token gaps only
+    assert tl.ms_per_token == pytest.approx((11.0 - 10.4) * 1e3 / 3)
+    rec = tl.record("completed", 11.0)
+    validate_record(rec)
+    assert rec["tenant"] == "a" and rec["tokens"] == 4
+    # TTFT can never exceed total latency
+    assert rec["ttft_ms"] <= (11.0 - 10.0) * 1e3
+    # a tokenless (cancelled-before-prefill) timeline stays schema-valid
+    empty = RequestTimeline(2, 0.0).record("cancelled", 1.0)
+    validate_record(empty)
+    assert empty["ttft_ms"] == -1.0 and empty["tokens"] == 0
+
+
+def test_stats_delta_monotone_contract():
+    a = {"steps": 1, "tokens": 4}
+    b = {"steps": 3, "tokens": 9}
+    assert stats_delta(a, b) == {"steps": 2, "tokens": 5}
+    with pytest.raises(ValueError):
+        stats_delta(b, a)                           # regression must raise
+    # gauges are excluded from the counter set
+    names = counter_fields(EngineStats())
+    assert "peak_pool_blocks" not in names and "wall" not in names
+    assert "tokens" in names and "preemptions" in names
+
+
+# -- delta accounting against a real engine ----------------------------
+
+
+def _run_with_tap(engine_or_fleet, engines, prompts, max_new):
+    """Step to drain, emitting per-window deltas; returns per-engine
+    delta sums keyed like the snapshots."""
+    sink = RingBufferTracker(4096)
+    taps = [EngineTap(e, ring=i) for i, e in enumerate(engines)]
+    sums = [dict.fromkeys(counter_fields(e.stats), 0) for e in engines]
+    for p in prompts:
+        engine_or_fleet.submit(list(p), max_new)
+    while engine_or_fleet.has_work():
+        engine_or_fleet.step()
+        for tap, acc in zip(taps, sums):
+            rec = tap.emit(sink, t=0.0)
+            if rec is not None:
+                for k, v in rec["delta"].items():
+                    acc[k] += v
+    engine_or_fleet.drain()
+    # one final emit catches counters drain() itself touched
+    for tap, acc in zip(taps, sums):
+        rec = tap.emit(sink, t=0.0)
+        if rec is not None:
+            for k, v in rec["delta"].items():
+                acc[k] += v
+    return sums, sink
+
+
+def test_deltas_sum_to_cumulative_single_engine(tiny_model):
+    model, params = tiny_model
+    eng = LPUEngine(model, params, EngineConfig(
+        slots=2, max_seq=64, paged=True, block_size=16,
+        prefix_cache=True))
+    sums, sink = _run_with_tap(eng, [eng],
+                               [[1, 2, 3], [4, 5], [1, 2, 3, 9]], 6)
+    final = snapshot_stats(eng.stats)
+    assert sums[0] == final
+    assert eng.stats.tokens > 0
+    assert all(r["dt_ms"] >= 0 for r in sink.records())
+
+
+def test_deltas_survive_reset_regression(tiny_model):
+    # THE regression test: chaos kills ring 0 mid-flight; the rebuilt
+    # scheduler/pool/prefix restart their counters at zero, but the
+    # banked bases must keep cumulative EngineStats monotone — every
+    # emitted delta >= 0 (EngineTap raises otherwise) and the sums
+    # still equal the final cumulative counters
+    model, params = tiny_model
+    shared = list(range(1, 33))
+    prompts = [shared + [50], shared + [51], [4, 5, 6], shared + [52]]
+    fleet = MultiRingEngine(model, params, None, rings=2,
+                            config=EngineConfig(
+                                slots=2, max_seq=64, paged=True,
+                                block_size=16, prefix_cache=True,
+                                chaos="ring@2"))
+    sums, _ = _run_with_tap(fleet, fleet.engines, prompts, 8)
+    assert sum(e.stats.ring_failures for e in fleet.engines) >= 1
+    for eng, acc in zip(fleet.engines, sums):
+        assert acc == snapshot_stats(eng.stats)
+    # the prefix counters kept counting across the rebuild: lookups on
+    # the failed ring resume from the banked base, never below it
+    hit = [e for e in fleet.engines if e.stats.ring_failures]
+    assert hit and all(e.stats.prefix_lookups >= 0 for e in hit)
+
+
+def test_cumulative_counters_never_regress_across_reset(tiny_model):
+    # direct unit on the engine fix, no fleet: preempt + evict + prefix
+    # traffic, snapshot, reset(), then verify no assigned counter went
+    # backwards on the next step
+    model, params = tiny_model
+    eng = LPUEngine(model, params, EngineConfig(
+        slots=2, max_seq=64, paged=True, block_size=16,
+        prefix_cache=True))
+    eng.generate([[1, 2, 3, 4] * 4, [1, 2, 3, 4] * 4 + [9]], 8)
+    before = snapshot_stats(eng.stats)
+    assert before["prefix_lookups"] > 0
+    eng.reset()                                     # rebuild mid-life
+    eng.generate([[7, 8, 9]], 4)
+    after = snapshot_stats(eng.stats)
+    stats_delta(before, after)                      # raises on regression
+    assert after["prefix_lookups"] >= before["prefix_lookups"]
+    assert after["preemptions"] >= before["preemptions"]
+    assert after["evicted_blocks"] >= before["evicted_blocks"]
+
+
+def test_engine_tap_skips_quiet_windows(tiny_model):
+    model, params = tiny_model
+    eng = LPUEngine(model, params, EngineConfig(slots=2, max_seq=64,
+                                                paged=True,
+                                                block_size=16))
+    sink = RingBufferTracker(64)
+    tap = EngineTap(eng)
+    assert tap.emit(sink, t=0.0) is None            # nothing happened
+    assert sink.seen == 0
+    eng.generate([[1, 2, 3]], 4)
+    rec = tap.emit(sink, t=1.0)
+    # the first generated token comes out of prefill, the other three
+    # out of decode steps: the delta mirrors the cumulative counter
+    assert rec is not None and rec["delta"]["tokens"] == eng.stats.tokens
+    assert math.isfinite(rec["dt_ms"])
